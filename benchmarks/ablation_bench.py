@@ -1,0 +1,81 @@
+"""E7 (beyond-paper ablation): what does proof-of-computation actually
+buy? Run the same permissionless round-loop with and without the eq.-3
+mu term in PEERSCORE (TrainConfig.use_poc) against a copycat (republishes
+an honest peer's payload — identical LossScore by construction) and a
+lazy peer (trains on random data, ignores its assignment).
+
+Claim under test (paper §3.1): without PoC the copycat's rating equals
+its victim's, so it earns weight; with PoC its mu stays ~0 and it is
+excluded from the aggregation.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.configs.base import TrainConfig
+from repro.configs.registry import tiny_config
+from repro.training.peer import PeerConfig
+from repro.training.round_loop import build_sim, run_rounds
+
+
+def _run(use_poc: bool, rounds: int, seed: int = 0):
+    cfg = tiny_config()
+    hp = TrainConfig(seed=seed, learning_rate=2e-3, warmup_steps=5,
+                     total_steps=rounds, top_g=3, eval_set_size=5,
+                     demo_chunk=16, demo_topk=8, demo_beta=0.9,
+                     use_poc=use_poc)
+    pcs = [
+        PeerConfig(uid="honest-0"),
+        PeerConfig(uid="honest-1"),
+        PeerConfig(uid="copycat", behavior="copycat",
+                   copy_victim="honest-0"),
+        PeerConfig(uid="lazy", behavior="lazy"),
+        PeerConfig(uid="honest-2"),
+    ]
+    validator, nodes, chain, store, _ = build_sim(
+        cfg, hp, pcs, batch=4, seq_len=64)
+    sim = run_rounds(validator, nodes, chain, rounds,
+                     eval_every=rounds + 1, fast_set_size=len(pcs))
+    last = sim.reports[-1]
+    mus = {p.uid: (validator.peer_state[p.uid].mu
+                   if p.uid in validator.peer_state else 0.0) for p in pcs}
+    return ({p.uid: last.norm_scores.get(p.uid, 0.0) for p in pcs},
+            {p.uid: last.weights.get(p.uid, 0.0) for p in pcs}, mus)
+
+
+def run(rounds: int = 30, seed: int = 0):
+    full_scores, full_w, full_mu = _run(True, rounds, seed)
+    abl_scores, abl_w, abl_mu = _run(False, rounds, seed)
+    rows = []
+    for uid in full_scores:
+        rows.append({"peer": uid,
+                     "mu": full_mu[uid],
+                     "x_norm(poc)": full_scores[uid],
+                     "in_topG(poc)": int(full_w[uid] > 0),
+                     "x_norm(no_poc)": abl_scores[uid],
+                     "in_topG(no_poc)": int(abl_w[uid] > 0)})
+    common.emit("ablation_poc", rows,
+                ["peer", "mu", "x_norm(poc)", "in_topG(poc)",
+                 "x_norm(no_poc)", "in_topG(no_poc)"])
+    honest = [u for u in full_scores if u.startswith("honest")]
+    # the paper's eq.-3 claim: compliant peers drive mu > 0; freeriders
+    # hover near 0 (copycat: victim's gradient has no preference for the
+    # copycat's assigned pages) or below (lazy)
+    h_mu = min(full_mu[u] for u in honest)
+    assert h_mu > 0.3, full_mu
+    assert full_mu["copycat"] < h_mu, full_mu
+    assert full_mu["lazy"] < 0.0, full_mu
+    # with PoC the lazy peer earns nothing
+    assert full_scores["lazy"] < 0.05
+    # ABLATED: without PoC the incentive INVERTS — training on random
+    # data maximizes LossScore on the random eval subset, so the lazy
+    # peer out-earns everyone (this is what eq. 3 exists to prevent)
+    assert abl_scores["lazy"] > max(abl_scores[u] for u in honest)
+    print(f"-- mu: honest>={h_mu:+.2f} copycat={full_mu['copycat']:+.2f} "
+          f"lazy={full_mu['lazy']:+.2f}")
+    print(f"-- lazy share: {full_scores['lazy']:.3f} (PoC) vs "
+          f"{abl_scores['lazy']:.3f} (no PoC — incentive inverted)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: timers, CSV emission, result dirs."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+
+def time_call(fn: Callable, *args, repeat: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (us) of fn(*args); blocks on jax outputs."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, rows: List[Dict[str, Any]], csv_keys: List[str]) -> None:
+    """Print a CSV block and persist raw rows as JSON."""
+    print(f"\n### {name}")
+    print(",".join(csv_keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k)) for k in csv_keys))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=2, default=_jsonable)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def _jsonable(v):
+    try:
+        return float(v)
+    except Exception:
+        return str(v)

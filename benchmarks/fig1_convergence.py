@@ -1,0 +1,91 @@
+"""E1 (paper Fig. 1): Gauntlet/DeMo permissionless training vs the
+centralized AdamW-DDP baseline — same model, same rounds, same data
+budget per peer. The paper's claim: per-iteration convergence of the
+incentivized DeMo run is competitive with (early on, better than) AdamW.
+
+Laptop-scale instantiation: a tiny dense LM on the deterministic Markov
+corpus; K peers, the validator aggregates top-G. The AdamW baseline
+averages the same K peers' gradients exactly (DDP semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import TrainConfig
+from repro.configs.registry import tiny_config
+from repro.data import pipeline
+from repro.demo import adamw
+from repro.models import model as M
+from repro.training.peer import PeerConfig
+from repro.training.round_loop import build_sim, run_rounds
+
+
+def run(rounds: int = 40, peers: int = 6, batch: int = 4,
+        seq_len: int = 64, eval_every: int = 4, seed: int = 0):
+    cfg = tiny_config()
+    hp = TrainConfig(seed=seed, learning_rate=2e-3, warmup_steps=5,
+                     total_steps=rounds, top_g=peers, eval_set_size=4,
+                     demo_chunk=16, demo_topk=8, demo_beta=0.9)
+    corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=seed)
+
+    def eval_batch(rnd):
+        return pipeline.unassigned_data(corpus, seed + 1, "eval", rnd,
+                                        8, seq_len)
+
+    # ---------------- Gauntlet / DeMo permissionless run
+    pcs = [PeerConfig(uid=f"peer-{i}") for i in range(peers)]
+    validator, nodes, chain, store, _ = build_sim(
+        cfg, hp, pcs, batch=batch, seq_len=seq_len, corpus=corpus)
+    sim = run_rounds(validator, nodes, chain, rounds,
+                     eval_every=eval_every, eval_batch_fn=eval_batch)
+    demo_losses = sim.val_losses
+
+    # ---------------- AdamW DDP baseline (same peers' batches, psum'd)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adamw.init_state(params)
+
+    def loss_of(p, b):
+        return M.loss_fn(p, b, cfg)[0]
+
+    grad = jax.jit(jax.grad(loss_of))
+    loss_j = jax.jit(loss_of)
+    step_j = jax.jit(lambda p, g, o, lr: adamw.step(p, g, o, lr=lr))
+    adam_losses = []
+    for rnd in range(rounds):
+        grads = None
+        for i in range(peers):
+            b = pipeline.select_data(corpus, hp.seed, f"peer-{i}", rnd,
+                                     batch, seq_len)
+            g = grad(params, b)
+            grads = g if grads is None else jax.tree.map(
+                jnp.add, grads, g)
+        grads = jax.tree.map(lambda x: x / peers, grads)
+        lr = validator.lr_at(rnd)
+        params, opt = step_j(params, grads, opt, lr)
+        if rnd % eval_every == 0:
+            adam_losses.append(float(loss_j(params, eval_batch(rnd))))
+
+    rows = []
+    for i, rnd in enumerate(range(0, rounds, eval_every)):
+        rows.append({"round": rnd,
+                     "gauntlet_demo_loss": demo_losses[i],
+                     "adamw_ddp_loss": adam_losses[i]})
+    common.emit("fig1_convergence", rows,
+                ["round", "gauntlet_demo_loss", "adamw_ddp_loss"])
+    d0, dT = demo_losses[0], demo_losses[-1]
+    a0, aT = adam_losses[0], adam_losses[-1]
+    print(f"-- demo: {d0:.4f} -> {dT:.4f}   adamw: {a0:.4f} -> {aT:.4f}")
+    # the paper's Fig-1 claim is per-iteration competitiveness with the
+    # centralized baseline, not an absolute loss target
+    assert dT < d0, "Gauntlet/DeMo run failed to converge"
+    assert (d0 - dT) > 0.4 * (a0 - aT), (
+        "Gauntlet/DeMo not competitive with AdamW-DDP", d0 - dT, a0 - aT)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

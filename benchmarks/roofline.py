@@ -1,0 +1,89 @@
+"""Deliverable g: roofline table assembled from the dry-run JSONs in
+experiments/dryrun/ (written by ``python -m repro.launch.dryrun``).
+
+Per (arch x shape x mesh x variant): the three roofline terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio,
+and a per-pair improvement hint. Markdown output suitable for pasting
+into EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+HINTS = {
+    "compute": ("shave HLO FLOPs: less remat recompute, fuse the DCT "
+                "matmuls, drop padded-vocab logits work"),
+    "memory": ("cut bytes: smaller remat policy, bf16 error-feedback, "
+               "fused CE over vocab chunks, larger per-step tiles"),
+    "collective": ("re-shard: fewer all-gathers of params (keep TP "
+                   "weights resident), compress cross-peer payloads "
+                   "harder, overlap collectives with compute"),
+}
+
+
+def load(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def table(recs: List[Dict], variant: str = None, mesh: str = None) -> str:
+    rows = [r for r in recs
+            if (variant is None or r["variant"] == variant)
+            and (mesh is None or r["mesh"] == mesh)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"], r["variant"]))
+    out = ["| arch | shape | mesh | var | compute | memory | collective |"
+           " dominant | useful |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['variant']} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def hints_block(recs: List[Dict]) -> str:
+    lines = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        dom = r["dominant"]
+        lines.append(f"- {r['arch']} x {r['shape']} ({r['mesh']}/"
+                     f"{r['variant']}): {dom}-bound "
+                     f"({fmt_s(r[dom + '_s'])}) -> {HINTS[dom]}")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load()
+    if not recs:
+        print("-- no dry-run records; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return []
+    print(table(recs))
+    doms = {}
+    for r in recs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"\n-- {len(recs)} records; dominant-term counts: {doms}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark harness entry point (deliverable d): one module per paper
+table/figure. ``python -m benchmarks.run [--only NAME] [--rounds N]``.
+
+  fig1          paper Fig. 1  — Gauntlet/DeMo vs AdamW-DDP convergence
+  fig2          paper Fig. 2  — LossScore/LossRating peer separation
+  table1        paper Table 1 — downstream-parity proxies
+  byzantine     paper §4      — norm attack vs DCT-norm+sign defense
+  compression   paper §2/§5   — wire + collective bytes vs dense DDP
+  kernels       Pallas kernels vs jnp oracle
+  roofline      deliverable g — table from experiments/dryrun JSONs
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="simulation rounds for fig1/fig2/table1")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (ablation_bench, byzantine_bench,
+                            compression_bench, fig1_convergence,
+                            fig2_lossrating, kernel_bench, roofline,
+                            table1_parity)
+
+    benches = {
+        "fig1": lambda: fig1_convergence.run(rounds=args.rounds),
+        "fig2": lambda: fig2_lossrating.run(rounds=args.rounds),
+        "table1": lambda: table1_parity.run(rounds=args.rounds),
+        "byzantine": byzantine_bench.run,
+        "compression": compression_bench.run,
+        "kernels": kernel_bench.run,
+        "ablation": lambda: ablation_bench.run(rounds=args.rounds),
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    failures = []
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        print(f"\n{'=' * 60}\n== bench: {name}\n{'=' * 60}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"== {name} ok in {time.time() - t0:.1f}s")
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"bench failures: {failures}")
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

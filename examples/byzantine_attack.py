@@ -1,0 +1,65 @@
+"""Byzantine attack demo (paper §4): run the same permissionless round
+twice — once with the paper's defenses (DCT-domain per-peer L2
+normalization + post-aggregation sign) and once with a naive mean — and
+watch a single norm-rescaling attacker destroy the undefended run.
+
+Run:  PYTHONPATH=src python examples/byzantine_attack.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import tiny_config
+from repro.core import byzantine
+from repro.data import pipeline
+from repro.demo import compress, optimizer as demo_opt
+from repro.models import model as M
+
+
+def main():
+    cfg = tiny_config()
+    hp = TrainConfig(demo_chunk=16, demo_topk=8, demo_beta=0.9)
+    corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=0)
+    lr = 2e-3
+    grad = jax.jit(jax.grad(lambda p, b: M.loss_fn(p, b, cfg)[0]))
+    loss_j = jax.jit(lambda p, b: M.loss_fn(p, b, cfg)[0])
+    eval_b = pipeline.unassigned_data(corpus, 99, "eval", 0, 8, 64)
+
+    def run(defended: bool, rounds: int = 10):
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        metas = compress.tree_meta(params, hp.demo_chunk)
+        states = {f"p{i}": demo_opt.init_state(params) for i in range(4)}
+        states["evil"] = demo_opt.init_state(params)
+        losses = [float(loss_j(params, eval_b))]
+        for rnd in range(rounds):
+            payloads = []
+            for uid in states:
+                b = pipeline.select_data(corpus, 0, uid, rnd, 4, 64)
+                g = grad(params, b)
+                pl, states[uid] = demo_opt.local_step(
+                    g, states[uid], beta=hp.demo_beta,
+                    chunk=hp.demo_chunk, k=hp.demo_topk, metas=metas)
+                if uid == "evil":
+                    pl = byzantine.norm_attack(pl, scale=1e4)
+                payloads.append(pl)
+            delta = demo_opt.aggregate(payloads, metas,
+                                       normalize=defended,
+                                       apply_sign=defended)
+            params = demo_opt.apply_update(params, delta, lr)
+            losses.append(float(loss_j(params, eval_b)))
+        return losses
+
+    defended = run(True)
+    naive = run(False)
+    print("round | defended (norm+sign) | naive mean")
+    for i, (d, n) in enumerate(zip(defended, naive)):
+        bar = "#" * int(min(d, 20) * 2)
+        print(f"{i:5d} | {d:8.4f} {bar:<16s} | {n:10.4f}")
+    print(f"\n1 attacker among 5 peers, payload rescaled 1e4x:")
+    print(f"  defended final loss: {defended[-1]:.4f} (converging)")
+    print(f"  naive    final loss: {naive[-1]:.4f} "
+          f"({'diverged/stalled' if naive[-1] > defended[-1] else 'ok?!'})")
+
+
+if __name__ == "__main__":
+    main()

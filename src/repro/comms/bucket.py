@@ -1,0 +1,79 @@
+"""S3-compliant bucket communication stub (paper §5).
+
+Each peer owns a bucket and *writes* pseudo-gradient payloads to it; the
+validator and other peers *read* using the read keys committed on chain.
+This in-process store preserves the properties the incentive layer depends
+on: robust server-side timestamps (here: chain block at put time), a put
+window per round, immutable objects per (round, key), and read-key gating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ObjectMeta:
+    put_block: int
+    size_bytes: int
+
+
+class Bucket:
+    def __init__(self, owner: str, read_key: str):
+        self.owner = owner
+        self.read_key = read_key
+        self._objects: Dict[str, Tuple[Any, ObjectMeta]] = {}
+
+    def put(self, key: str, value: Any, block: int, size_bytes: int) -> None:
+        if key in self._objects:
+            raise KeyError(f"object {key!r} already exists (immutable)")
+        self._objects[key] = (value, ObjectMeta(put_block=block,
+                                                size_bytes=size_bytes))
+
+    def get(self, key: str, read_key: str) -> Tuple[Any, ObjectMeta]:
+        if read_key != self.read_key:
+            raise PermissionError("bad read key")
+        return self._objects[key]
+
+    def head(self, key: str) -> Optional[ObjectMeta]:
+        obj = self._objects.get(key)
+        return obj[1] if obj else None
+
+    def list_keys(self) -> Iterable[str]:
+        return self._objects.keys()
+
+
+class BucketStore:
+    """The cloud provider: one bucket per registered peer."""
+
+    def __init__(self, chain):
+        self.chain = chain
+        self.buckets: Dict[str, Bucket] = {}
+
+    def create_bucket(self, owner: str) -> str:
+        read_key = f"rk-{owner}"
+        self.buckets[owner] = Bucket(owner, read_key)
+        return read_key
+
+    @staticmethod
+    def gradient_key(round_idx: int) -> str:
+        return f"grad/round-{round_idx:08d}"
+
+    def put_gradient(self, owner: str, round_idx: int, payload,
+                     size_bytes: int) -> None:
+        self.buckets[owner].put(self.gradient_key(round_idx), payload,
+                                block=self.chain.block,
+                                size_bytes=size_bytes)
+
+    def get_gradient(self, owner: str, round_idx: int, read_key: str):
+        return self.buckets[owner].get(self.gradient_key(round_idx), read_key)
+
+    def within_put_window(self, owner: str, round_idx: int,
+                          window_blocks: int) -> bool:
+        """§3.2 check (a): the object must exist and have been put inside
+        [round start, round start + window)."""
+        meta = self.buckets[owner].head(self.gradient_key(round_idx))
+        if meta is None:
+            return False
+        start = round_idx * self.chain.blocks_per_round
+        return start <= meta.put_block < start + window_blocks

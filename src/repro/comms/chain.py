@@ -1,0 +1,96 @@
+"""Blockchain stub (Bittensor-shaped): global clock, registration,
+bucket-key commitments, stake, and posted incentive weights.
+
+The real deployment posts to the Bittensor chain and relies on its block
+height as a consistent global clock for put-window enforcement (paper §3.2,
+§5). This in-process stand-in preserves those semantics: a monotone block
+counter advanced by the round loop, per-peer registration with read-key
+commitments, validator stake, and an incentive bulletin combined across
+validators by stake weight (Yuma-consensus-lite: stake-weighted median).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PeerRecord:
+    uid: str
+    bucket_read_key: str
+    registered_at: int
+
+
+@dataclasses.dataclass
+class ValidatorRecord:
+    uid: str
+    stake: float
+
+
+class Chain:
+    """Single source of truth for time, identity and posted weights."""
+
+    def __init__(self, blocks_per_round: int = 10):
+        self._block = 0
+        self.blocks_per_round = blocks_per_round
+        self.peers: Dict[str, PeerRecord] = {}
+        self.validators: Dict[str, ValidatorRecord] = {}
+        self._weights: Dict[str, Dict[str, float]] = {}   # validator -> peer -> w
+        self.checkpoint_pointer: Optional[str] = None      # highest-staked val
+
+    # ---- clock -----------------------------------------------------
+    @property
+    def block(self) -> int:
+        return self._block
+
+    def advance(self, blocks: int = 1) -> int:
+        self._block += blocks
+        return self._block
+
+    def round_of(self, block: Optional[int] = None) -> int:
+        return (block if block is not None else self._block) // self.blocks_per_round
+
+    # ---- registration (permissionless: anyone may register) --------
+    def register_peer(self, uid: str, bucket_read_key: str) -> PeerRecord:
+        rec = PeerRecord(uid=uid, bucket_read_key=bucket_read_key,
+                         registered_at=self._block)
+        self.peers[uid] = rec
+        return rec
+
+    def deregister_peer(self, uid: str) -> None:
+        self.peers.pop(uid, None)
+
+    def register_validator(self, uid: str, stake: float) -> ValidatorRecord:
+        rec = ValidatorRecord(uid=uid, stake=stake)
+        self.validators[uid] = rec
+        top = max(self.validators.values(), key=lambda v: v.stake)
+        self.checkpoint_pointer = top.uid
+        return rec
+
+    # ---- incentive bulletin ----------------------------------------
+    def post_weights(self, validator_uid: str,
+                     weights: Dict[str, float]) -> None:
+        assert validator_uid in self.validators, "must stake to post"
+        self._weights[validator_uid] = dict(weights)
+
+    def consensus_weights(self) -> Dict[str, float]:
+        """Stake-weighted median across validators (Yuma-consensus-lite)."""
+        if not self._weights:
+            return {}
+        peers = sorted({p for w in self._weights.values() for p in w})
+        stakes = np.array([self.validators[v].stake for v in self._weights],
+                          np.float64)
+        stakes = stakes / stakes.sum()
+        out = {}
+        for p in peers:
+            vals = np.array([w.get(p, 0.0) for w in self._weights.values()])
+            order = np.argsort(vals)
+            cum = np.cumsum(stakes[order])
+            med = vals[order][np.searchsorted(cum, 0.5)]
+            out[p] = float(med)
+        s = sum(out.values())
+        if s > 0:
+            out = {p: v / s for p, v in out.items()}
+        return out

@@ -1,0 +1,18 @@
+"""DeepSeekMoE-16B — fine-grained MoE: 64 routed top-6 + 2 shared. [arXiv:2401.06066]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    source="arXiv:2401.06066",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,       # MHA in deepseek-moe-16b
+    d_ff=10944,            # dense layer-0 FFN
+    vocab_size=102_400,
+    max_seq_len=16_384,
+    moe=MoEConfig(num_experts=64, num_shared_experts=2, top_k=6,
+                  expert_d_ff=1408, first_dense_layers=1),
+    peer_axes=("pod", "data"),
+).validate()

@@ -1,0 +1,20 @@
+"""H2O-Danube3-4B — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    source="arXiv:2401.16818",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=10240,
+    vocab_size=32_000,
+    max_seq_len=32_768,
+    rope_theta=500_000.0,
+    attn_window=4096,      # native SWA (mistral-style)
+    peer_axes=("pod", "data"),
+    long_context_ok=True,
+).validate()

@@ -1,0 +1,21 @@
+"""Hymba-1.5B — hybrid parallel attention + mamba heads, SWA mix. [arXiv:2411.13676]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="arXiv:2411.13676",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32_001,
+    max_seq_len=8192,
+    attn_window=1024,      # hymba: most layers use SWA; 3 global-attn layers
+    swa_every=1,
+    hybrid_attn=True,
+    ssm=SSMConfig(state_size=16, expand=2, conv_kernel=4, chunk_len=128),
+    peer_axes=("pod", "data"),
+    long_context_ok=True,  # mamba heads + SWA attention: sub-quadratic
+).validate()

@@ -1,0 +1,17 @@
+"""InternVL2-2B — InternViT(stub) + InternLM2-1.8B LM backbone. [arXiv:2404.16821]"""
+from repro.configs.base import ModelConfig, FrontendConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_553,
+    max_seq_len=32_768,
+    frontend=FrontendConfig(kind="vision", num_prefix_tokens=256, embed_dim=1024),
+    peer_axes=("pod", "data"),
+).validate()

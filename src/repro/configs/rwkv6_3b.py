@@ -1,0 +1,19 @@
+"""RWKV-6 "Finch" 3B — attention-free, data-dependent decay. [arXiv:2404.05892]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    source="arXiv:2404.05892",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,          # d_model / head_dim(64) time-mix heads
+    num_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65_536,
+    max_seq_len=1_048_576,  # recurrent: unbounded in principle
+    # chunked-WKV L: U-shaped memory cost, minimum at 64 (§Perf pair C)
+    ssm=SSMConfig(head_dim=64, chunk_len=64),  # L=64 (within 2% of best; §Perf C)
+    peer_axes=("pod", "data"),
+    long_context_ok=True,
+).validate()

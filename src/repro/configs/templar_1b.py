@@ -1,0 +1,20 @@
+"""Templar-1B — the paper's own 1.2B llama-style run (Gauntlet live run).
+
+Hyperparameters follow DeMo [arXiv:2411.19870] / the paper's §6 description:
+1.2B params, llama-arch, trained on FineWebEdu with G=15 aggregated peers.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="templar-1b",
+    family="dense",
+    source="this paper; DeMo arXiv:2411.19870",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32_000,
+    max_seq_len=2048,
+    peer_axes=("pod", "data"),
+).validate()

@@ -1,0 +1,24 @@
+"""Whisper-base — enc-dec ASR; conv/mel frontend is a stub. [arXiv:2212.04356]
+
+Backbone-only per the assignment carve-out: ``input_specs`` provides
+precomputed encoder frame embeddings (1500 frames of d=512); we implement
+the decoder transformer (self-attn + cross-attn).
+"""
+from repro.configs.base import ModelConfig, FrontendConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51_865,
+    max_seq_len=32_768,     # decoder positions exercised by assigned shapes
+    rope_theta=10000.0,     # (whisper uses learned pos; rope is our TPU-native stand-in)
+    cross_attention=True,
+    frontend=FrontendConfig(kind="audio", num_prefix_tokens=1500, embed_dim=512),
+    peer_axes=("pod", "data"),
+).validate()

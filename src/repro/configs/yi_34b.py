@@ -1,0 +1,18 @@
+"""Yi-34B — llama-arch dense GQA (kv=8). [arXiv:2403.04652]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    source="arXiv:2403.04652",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64_000,
+    max_seq_len=200_000,
+    rope_theta=5_000_000.0,
+    param_dtype="bfloat16",   # 34B: per-peer EF buffer forces bf16 masters
+    peer_axes=("pod", "data"),
+).validate()

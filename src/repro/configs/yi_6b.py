@@ -1,0 +1,17 @@
+"""Yi-6B — llama-arch dense GQA (kv=4). [arXiv:2403.04652]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family="dense",
+    source="arXiv:2403.04652",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64_000,
+    max_seq_len=32_768,
+    rope_theta=5_000_000.0,
+    peer_axes=("pod", "data"),
+).validate()

@@ -1,0 +1,3 @@
+"""Gauntlet incentive core — the paper's primary contribution."""
+from repro.core.gauntlet import Validator, RoundReport  # noqa: F401
+from repro.core.openskill import PlackettLuce, Rating, RatingBook  # noqa: F401

@@ -1,0 +1,38 @@
+"""Byzantine behaviours (paper §4) — attack payload transforms used by the
+simulation, tests and the byzantine benchmark."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.demo.compress import Payload
+
+
+def _map_vals(payload_tree, fn):
+    return jax.tree.map(lambda p: Payload(vals=fn(p.vals), idx=p.idx),
+                        payload_tree,
+                        is_leaf=lambda x: isinstance(x, Payload))
+
+
+def norm_attack(payload_tree, scale: float = 1e4):
+    """Rescale the pseudo-gradient to dominate the aggregation (§4 (b))."""
+    return _map_vals(payload_tree, lambda v: v * scale)
+
+
+def sign_flip_attack(payload_tree):
+    """Ascend instead of descend."""
+    return _map_vals(payload_tree, lambda v: -v)
+
+
+def noise_attack(payload_tree, key, sigma: float = 1.0):
+    """Replace coefficients with Gaussian noise (keeps valid format)."""
+    def fn(v):
+        return sigma * jax.random.normal(key, v.shape, v.dtype)
+    return _map_vals(payload_tree, fn)
+
+
+def copy_payload(victim_payload_tree):
+    """Peer copying (§3.1): republish another peer's payload verbatim."""
+    return jax.tree.map(lambda p: Payload(vals=p.vals, idx=p.idx),
+                        victim_payload_tree,
+                        is_leaf=lambda x: isinstance(x, Payload))

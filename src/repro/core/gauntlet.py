@@ -1,0 +1,229 @@
+"""The Gauntlet validator (paper §3, Algorithm 1).
+
+Two-stage evaluation per communication round:
+  fast eval  (large set F_t): put-window, format, sync-score checks → φ
+  primary eval (small set S_t): LossScore on assigned + random data,
+      OpenSkill LossRating match, proof-of-computation μ update.
+Then PEERSCORE = μ·LossRating, eq.-5 normalization posted on chain, top-G
+aggregation weights, and the coordinated DeMo update of the global model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.bucket import BucketStore
+from repro.comms.chain import Chain
+from repro.configs.base import TrainConfig
+from repro.core import scores as S
+from repro.core.openskill import RatingBook
+from repro.demo import compress, optimizer as demo_opt
+from repro.demo.compress import Payload
+from repro.demo.schedules import warmup_cosine
+
+
+@dataclasses.dataclass
+class PeerState:
+    mu: float = 0.0                 # proof-of-computation EMA (eq. 3)
+    last_fast_pass: bool = True
+    evals: int = 0
+
+
+@dataclasses.dataclass
+class RoundReport:
+    round_idx: int
+    evaluated: List[str]
+    fast_checked: List[str]
+    loss_scores_rand: Dict[str, float]
+    loss_scores_assigned: Dict[str, float]
+    norm_scores: Dict[str, float]
+    weights: Dict[str, float]
+    lr: float
+    train_loss: Optional[float] = None
+
+
+class Validator:
+    """Holds the reference model θ and runs Algorithm 1 every round."""
+
+    def __init__(self, uid: str, params, metas, eval_loss_fn: Callable,
+                 hp: TrainConfig, chain: Chain, store: BucketStore,
+                 data_fns: Dict[str, Callable], stake: float = 1000.0,
+                 rng: Optional[np.random.RandomState] = None):
+        self.uid = uid
+        self.params = params
+        self.metas = metas
+        self.eval_loss = eval_loss_fn          # (params, batch) -> scalar
+        self.hp = hp
+        self.chain = chain
+        self.store = store
+        # data_fns: assigned(peer, round) / unassigned(peer, round)
+        self.data = data_fns
+        self.rng = rng or np.random.RandomState(0)
+        self.book = RatingBook(mu=hp.openskill_mu, sigma=hp.openskill_sigma,
+                               beta=hp.openskill_beta, kappa=hp.openskill_kappa)
+        self.peer_state: Dict[str, PeerState] = {}
+        self.step = 0
+        self.current_top_g: List[str] = []
+        chain.register_validator(uid, stake)
+        self._agg = jax.jit(self._aggregate_impl)
+        self._signed_delta = jax.jit(
+            lambda pl: demo_opt.single_peer_delta(pl, self.metas))
+
+    # ------------------------------------------------------------ pieces
+    def _aggregate_impl(self, stacked_payloads):
+        return demo_opt.aggregate(stacked_payloads, self.metas,
+                                  normalize=True, apply_sign=True)
+
+    def _state(self, peer: str) -> PeerState:
+        if peer not in self.peer_state:
+            self.peer_state[peer] = PeerState()
+        return self.peer_state[peer]
+
+    def lr_at(self, step: Optional[int] = None) -> float:
+        return float(warmup_cosine(step if step is not None else self.step,
+                                   base_lr=self.hp.learning_rate,
+                                   warmup_steps=self.hp.warmup_steps,
+                                   total_steps=self.hp.total_steps))
+
+    def _format_ok(self, payload) -> bool:
+        """§3.2 check (c): tensor structure, shapes and dtypes."""
+        try:
+            flat_p = jax.tree.leaves(
+                payload, is_leaf=lambda x: isinstance(x, Payload))
+            flat_m = jax.tree.leaves(self.metas)
+            if len(flat_p) != len(flat_m):
+                return False
+            for p, m in zip(flat_p, flat_m):
+                if not isinstance(p, Payload):
+                    return False
+                nc = m.num_chunks
+                if (p.vals.shape != (nc, self.hp.demo_topk)
+                        or p.idx.shape != (nc, self.hp.demo_topk)):
+                    return False
+                if p.idx.dtype != jnp.int32:
+                    return False
+                if not bool(jnp.isfinite(p.vals).all()):
+                    return False
+                if bool((p.idx < 0).any()) or bool(
+                        (p.idx >= m.s * m.s).any()):
+                    return False
+            return True
+        except Exception:
+            return False
+
+    def fast_evaluate(self, peer: str, round_idx: int) -> bool:
+        """Returns pass/fail; applies φ penalty on fail (paper §3.2)."""
+        st = self._state(peer)
+        ok = True
+        # (a)+(b): payload present and inside the put window
+        if not self.store.within_put_window(
+                peer, round_idx, self.chain.blocks_per_round):
+            ok = False
+        payload = None
+        if ok:
+            try:
+                rk = self.chain.peers[peer].bucket_read_key
+                payload, _ = self.store.get_gradient(peer, round_idx, rk)
+            except Exception:
+                ok = False
+        # (c): format
+        if ok and not self._format_ok(payload):
+            ok = False
+        # sync score from the peer's sampled params
+        if ok:
+            try:
+                rk = self.chain.peers[peer].bucket_read_key
+                sample, _ = self.store.buckets[peer].get(
+                    f"sync/round-{round_idx:08d}", rk)
+                mine = S.sample_params_for_sync(
+                    self.params, jax.random.PRNGKey(round_idx))
+                sc = S.sync_score(mine, sample, self.lr_at())
+                if sc > self.hp.sync_score_threshold:
+                    ok = False
+            except KeyError:
+                ok = False
+        if not ok:
+            st.mu *= self.hp.fast_eval_penalty
+        st.last_fast_pass = ok
+        return ok
+
+    def primary_evaluate(self, peer: str, round_idx: int):
+        """LossScore on assigned + random data (Algorithm 1 inner loop)."""
+        rk = self.chain.peers[peer].bucket_read_key
+        payload, _ = self.store.get_gradient(peer, round_idx, rk)
+        delta = self._signed_delta(payload)
+        beta = self.hp.eval_beta_frac * self.lr_at()
+        d_assigned = self.data["assigned"](peer, round_idx)
+        d_rand = self.data["unassigned"](peer, round_idx)
+        s_assigned = S.loss_score(self.eval_loss, self.params, delta,
+                                  d_assigned, beta)
+        s_rand = S.loss_score(self.eval_loss, self.params, delta,
+                              d_rand, beta)
+        st = self._state(peer)
+        st.mu = S.poc_update(st.mu, s_assigned, s_rand, self.hp.poc_gamma)
+        st.evals += 1
+        return s_assigned, s_rand
+
+    # ------------------------------------------------------------ round
+    def run_round(self, round_idx: int, active_peers: List[str],
+                  fast_set_size: Optional[int] = None) -> RoundReport:
+        hp = self.hp
+        # --- fast evaluation set: top-G always included (paper §3.3)
+        fast_n = fast_set_size or max(len(active_peers) // 2, hp.top_g)
+        pool = [p for p in active_peers if p not in self.current_top_g]
+        self.rng.shuffle(pool)
+        fast_set = (self.current_top_g
+                    + pool[:max(0, fast_n - len(self.current_top_g))])
+        for peer in fast_set:
+            self.fast_evaluate(peer, round_idx)
+
+        # --- primary evaluation set S_t
+        candidates = [p for p in active_peers
+                      if self.store.within_put_window(
+                          p, round_idx, self.chain.blocks_per_round)]
+        self.rng.shuffle(candidates)
+        eval_set = candidates[:hp.eval_set_size]
+        ls_rand, ls_assigned = {}, {}
+        for peer in eval_set:
+            sa, sr = self.primary_evaluate(peer, round_idx)
+            ls_assigned[peer], ls_rand[peer] = sa, sr
+        # OpenSkill match over the random-subset scores
+        if len(ls_rand) >= 2:
+            self.book.match(ls_rand)
+
+        # --- PEERSCORE + normalization + chain post
+        raw = {p: S.peer_score(
+                   self._state(p).mu if hp.use_poc else 1.0,
+                   self.book.ordinal(p))
+               for p in active_peers}
+        norm = S.normalize_scores(raw, hp.norm_power)
+        self.chain.post_weights(self.uid, norm)
+
+        # --- aggregation: top-G equal weights (eq. 6)
+        weights = S.top_g_weights(norm, hp.top_g)
+        contributors = [p for p, w in weights.items() if w > 0
+                        and self.store.within_put_window(
+                            p, round_idx, self.chain.blocks_per_round)]
+        self.current_top_g = contributors
+        lr = self.lr_at()
+        if contributors:
+            payloads = []
+            for p in contributors:
+                rk = self.chain.peers[p].bucket_read_key
+                pl_, _ = self.store.get_gradient(p, round_idx, rk)
+                payloads.append(pl_)
+            stacked = jax.tree.map(
+                lambda *ps: Payload(vals=jnp.stack([q.vals for q in ps]),
+                                    idx=jnp.stack([q.idx for q in ps])),
+                *payloads, is_leaf=lambda x: isinstance(x, Payload))
+            delta = self._agg(stacked)
+            self.params = demo_opt.apply_update(self.params, delta, lr)
+            self.step += 1
+        return RoundReport(round_idx=round_idx, evaluated=eval_set,
+                           fast_checked=fast_set, loss_scores_rand=ls_rand,
+                           loss_scores_assigned=ls_assigned,
+                           norm_scores=norm, weights=weights, lr=lr)

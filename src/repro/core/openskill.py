@@ -1,0 +1,91 @@
+"""OpenSkill rating — Weng–Lin (2011) Plackett–Luce model.
+
+Re-implemented from the published update equations (the ``openskill``
+package is not installable offline; see DESIGN.md §8). One "match" ranks a
+set of peers by their LossScore; ratings (μ, σ) are updated in closed form.
+The paper uses this as ``LossRating_p`` because raw LossScores are noisy
+across rounds while *relative* rank is consistent (paper Fig. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+
+@dataclasses.dataclass
+class Rating:
+    mu: float = 25.0
+    sigma: float = 25.0 / 3.0
+
+    def ordinal(self, z: float = 3.0) -> float:
+        return self.mu - z * self.sigma
+
+
+@dataclasses.dataclass
+class PlackettLuce:
+    beta: float = 25.0 / 6.0
+    kappa: float = 1e-4
+
+    def rate(self, ratings: Sequence[Rating],
+             ranks: Sequence[int]) -> List[Rating]:
+        """Update a match. ``ranks[i]`` is peer i's placement (0 = best);
+        equal ranks are ties. Returns new Ratings (inputs not mutated)."""
+        n = len(ratings)
+        assert n == len(ranks) and n >= 2
+        c = math.sqrt(sum(r.sigma ** 2 + self.beta ** 2 for r in ratings))
+        exps = [math.exp(r.mu / c) for r in ratings]
+        # A_q: number of teams tied at q's rank
+        a = [sum(1 for rk in ranks if rk == ranks[q]) for q in range(n)]
+        # sum_q: total exp weight of teams placed at rank >= rank_q
+        sums = [sum(exps[i] for i in range(n) if ranks[i] >= ranks[q])
+                for q in range(n)]
+        out = []
+        for i in range(n):
+            omega, delta = 0.0, 0.0
+            for q in range(n):
+                if ranks[q] > ranks[i]:
+                    continue                      # only q placed <= i counts
+                quotient = exps[i] / sums[q]
+                if ranks[q] == ranks[i] and q == i:
+                    omega += (1.0 - quotient) / a[q]
+                else:
+                    omega += -quotient / a[q]
+                delta += quotient * (1.0 - quotient) / a[q]
+            r = ratings[i]
+            gamma = r.sigma / c                   # default gamma function
+            mu = r.mu + (r.sigma ** 2 / c) * omega
+            sig_sq = r.sigma ** 2 * max(
+                1.0 - (r.sigma ** 2 / c ** 2) * gamma * delta, self.kappa)
+            out.append(Rating(mu=mu, sigma=math.sqrt(sig_sq)))
+        return out
+
+
+class RatingBook:
+    """Per-peer rating store with sparse match updates (validator side)."""
+
+    def __init__(self, mu: float = 25.0, sigma: float = 25.0 / 3.0,
+                 beta: float = 25.0 / 6.0, kappa: float = 1e-4):
+        self._init = (mu, sigma)
+        self.model = PlackettLuce(beta=beta, kappa=kappa)
+        self.ratings: Dict[str, Rating] = {}
+
+    def get(self, peer: str) -> Rating:
+        if peer not in self.ratings:
+            self.ratings[peer] = Rating(*self._init)
+        return self.ratings[peer]
+
+    def match(self, scored: Dict[str, float]) -> None:
+        """Rank peers in one evaluation round by score (higher = better)."""
+        if len(scored) < 2:
+            return
+        peers = list(scored)
+        order = sorted(peers, key=lambda p: -scored[p])
+        rank_of = {p: i for i, p in enumerate(order)}
+        new = self.model.rate([self.get(p) for p in peers],
+                              [rank_of[p] for p in peers])
+        for p, r in zip(peers, new):
+            self.ratings[p] = r
+
+    def ordinal(self, peer: str, z: float = 3.0) -> float:
+        return self.get(peer).ordinal(z)

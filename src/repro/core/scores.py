@@ -1,0 +1,85 @@
+"""Gauntlet scoring primitives (paper §3, eqs. 2-6)."""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def loss_score(eval_loss_fn, params, delta, data_batch, beta: float):
+    """Eq. 2: LossScore = L(θ, D) − L(θ − β·Δ, D).
+
+    ``delta`` is the *signed* single-peer update (Algo 1: Sign(Δ_p)),
+    ``beta`` the damped step (β_t = c·α_t with c < 1).
+    """
+    before = eval_loss_fn(params, data_batch)
+    stepped = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32)
+                      - beta * d.astype(jnp.float32)).astype(p.dtype),
+        params, delta)
+    after = eval_loss_fn(stepped, data_batch)
+    return float(before) - float(after)
+
+
+def poc_update(mu_p: float, score_assigned: float, score_rand: float,
+               gamma: float) -> float:
+    """Eq. 3: proof-of-computation EMA of sign(assigned − random)."""
+    return gamma * mu_p + (1.0 - gamma) * float(
+        np.sign(score_assigned - score_rand))
+
+
+def sync_score(theta_validator: np.ndarray, theta_peer: np.ndarray,
+               alpha: float) -> float:
+    """§3.2: (1/(αN)) Σ |θ_i^val − θ_i^peer| over the N sampled params.
+
+    With sign-quantized updates (±α per step) this approximates the number
+    of update steps by which the peer has diverged.
+    """
+    tv = np.asarray(theta_validator, np.float64).ravel()
+    tp = np.asarray(theta_peer, np.float64).ravel()
+    assert tv.shape == tp.shape and tv.size > 0
+    return float(np.mean(np.abs(tv - tp)) / max(alpha, 1e-12))
+
+
+def sample_params_for_sync(params, key, per_tensor: int = 2) -> np.ndarray:
+    """Peers ship 2 values per tensor each round (negligible bytes)."""
+    leaves = jax.tree.leaves(params)
+    out = []
+    for i, leaf in enumerate(leaves):
+        flat = jnp.ravel(leaf)
+        k = jax.random.fold_in(key, i)
+        idx = jax.random.randint(k, (min(per_tensor, flat.size),), 0,
+                                 flat.size)
+        out.append(np.asarray(flat[idx], np.float32))
+    return np.concatenate(out)
+
+
+def peer_score(mu_p: float, loss_rating: float) -> float:
+    """Eq. 4: PEERSCORE = μ_p · LossRating_p."""
+    return mu_p * loss_rating
+
+
+def normalize_scores(scores: Dict[str, float], power: float = 2.0
+                     ) -> Dict[str, float]:
+    """Eq. 5: xᵖ = (s_p − min s)^c / Σ_k (s_k − min s)^c ; sums to 1."""
+    if not scores:
+        return {}
+    vals = np.array(list(scores.values()), np.float64)
+    shifted = np.maximum(vals - vals.min(), 0.0) ** power
+    total = shifted.sum()
+    if total <= 0:
+        norm = np.full_like(shifted, 1.0 / len(shifted))
+    else:
+        norm = shifted / total
+    return {p: float(v) for p, v in zip(scores, norm)}
+
+
+def top_g_weights(norm_scores: Dict[str, float], g: int) -> Dict[str, float]:
+    """Eq. 6: w_p = 1/G for the top-G normalized scores, else 0."""
+    if not norm_scores:
+        return {}
+    top = sorted(norm_scores, key=lambda p: -norm_scores[p])[:g]
+    gg = len(top)
+    return {p: (1.0 / gg if p in top else 0.0) for p in norm_scores}

@@ -1,0 +1,42 @@
+"""AdamW — the paper's Fig-1 centralized baseline (DDP all-reduce grads)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+    step: jnp.ndarray
+
+
+def init_state(params) -> AdamWState:
+    z = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def step(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
+         eps=1e-8, weight_decay=0.1):
+    t = state.step + 1
+    tf = t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** tf)
+        vhat = v / (1 - b2 ** tf)
+        p32 = p.astype(jnp.float32) * (1.0 - lr * weight_decay)
+        p32 = p32 - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return p32.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=is3)
+    return new_p, AdamWState(mu=new_m, nu=new_v, step=t)

@@ -1,0 +1,83 @@
+"""Top-k selection over per-chunk DCT coefficients + payload pytree utils.
+
+A compressed pseudo-gradient ("payload") is, per parameter tensor:
+    vals (num_chunks, k) float32   — kept DCT coefficients
+    idx  (num_chunks, k) int32     — their positions within the s*s chunk
+Payloads are dict pytrees mirroring the param tree, so they ride through
+jit/pjit/shard_map and ``jax.lax.all_gather`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.demo import dct
+
+
+class Payload(NamedTuple):
+    vals: jnp.ndarray   # (num_chunks, k)
+    idx: jnp.ndarray    # (num_chunks, k) int32
+
+
+def topk_compress(coeffs: jnp.ndarray, k: int) -> Payload:
+    """coeffs: (num_chunks, s*s) -> top-|k| by magnitude per chunk."""
+    mag = jnp.abs(coeffs)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(coeffs, idx, axis=-1)
+    return Payload(vals=vals, idx=idx.astype(jnp.int32))
+
+
+def topk_decompress(p: Payload, chunk_elems: int) -> jnp.ndarray:
+    """Payload -> dense (num_chunks, s*s) coefficient grid (zeros filled)."""
+    nc = p.vals.shape[0]
+    out = jnp.zeros((nc, chunk_elems), jnp.float32)
+    return out.at[jnp.arange(nc)[:, None], p.idx].set(p.vals.astype(jnp.float32))
+
+
+# ------------------------------------------------------------- tree utils
+
+
+def tree_meta(params, s: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda x: dct.chunk_meta(x.shape, s), params)
+
+
+def compress_tree(tree, metas, k: int):
+    """Pytree of tensors -> pytree of Payloads."""
+    return jax.tree.map(
+        lambda x, m: topk_compress(dct.encode(x, m), k), tree, metas)
+
+
+def decompress_tree(payloads, metas):
+    """Pytree of Payloads -> pytree of dense tensors."""
+    return jax.tree.map(
+        lambda p, m: dct.decode(topk_decompress(p, m.s * m.s), m),
+        payloads, metas, is_leaf=lambda x: isinstance(x, Payload))
+
+
+def payload_global_norm(payload_tree) -> jnp.ndarray:
+    """L2 norm over every kept coefficient of a peer's payload."""
+    leaves = [p.vals for p in jax.tree.leaves(
+        payload_tree, is_leaf=lambda x: isinstance(x, Payload))]
+    return jnp.sqrt(sum(jnp.sum(v.astype(jnp.float32) ** 2) for v in leaves))
+
+
+def normalize_payload(payload_tree, eps: float = 1e-12):
+    """Paper §4 / Algo 2 line 12: per-peer L2 normalization in the DCT
+    (encoded) domain — byzantine norm-rescaling defense."""
+    n = payload_global_norm(payload_tree)
+    scale = 1.0 / (n + eps)
+    return jax.tree.map(
+        lambda p: Payload(vals=p.vals * scale, idx=p.idx), payload_tree,
+        is_leaf=lambda x: isinstance(x, Payload))
+
+
+def payload_bytes(payload_tree) -> int:
+    """Wire size of one peer's compressed pseudo-gradient."""
+    total = 0
+    for p in jax.tree.leaves(payload_tree,
+                             is_leaf=lambda x: isinstance(x, Payload)):
+        total += p.vals.size * p.vals.dtype.itemsize
+        total += p.idx.size * 2  # int16 on the wire (s*s <= 2^15)
+    return total

@@ -1,0 +1,125 @@
+"""DeMo optimizer (Decoupled Momentum, arXiv:2411.19870) as used by the
+paper's framework (eq. 1 + Algo 2), plus the aggregation/update step.
+
+    local:     e ← β·e + g ;  q ← topk(dct(e)) ;  e ← e − dct⁻¹(q)
+    aggregate: q_k ← q_k / ||q_k||₂ ;  Δ ← sign(dct⁻¹(Σ_k w_k q_k))
+    update:    θ ← θ − α·Δ
+
+The aggregation accepts payloads with a leading peer axis (as produced by
+``jax.lax.all_gather`` over the peer mesh axes) or a list of payloads (the
+host-level validator path).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.demo import compress, dct
+from repro.demo.compress import Payload
+
+
+class DemoState(NamedTuple):
+    ef: object            # error-feedback buffer, pytree like params
+    step: jnp.ndarray
+
+
+def init_state(params, dtype=None) -> DemoState:
+    mk = (lambda x: jnp.zeros(x.shape, dtype or x.dtype))
+    return DemoState(ef=jax.tree.map(mk, params),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def local_step(grads, state: DemoState, *, beta: float, chunk: int,
+               k: int, metas=None, encode_fn=None):
+    """One peer's pseudo-gradient production.
+
+    Returns (payload_tree, new_state). ``encode_fn`` lets the caller swap in
+    the Pallas kernel pipeline; default is the jnp reference.
+    """
+    metas = metas or compress.tree_meta(grads, chunk)
+
+    def per_leaf(e, g, m):
+        e = beta * e.astype(jnp.float32) + g.astype(jnp.float32)
+        coeffs = (encode_fn or dct.encode)(e, m)
+        payload = compress.topk_compress(coeffs, k)
+        z = dct.decode(compress.topk_decompress(payload, m.s * m.s), m)
+        e_new = e - z
+        return payload, e_new
+
+    flat_e, treedef = jax.tree.flatten(state.ef)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(metas)
+    outs = [per_leaf(e, g, m) for e, g, m in zip(flat_e, flat_g, flat_m)]
+    payloads = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_ef = jax.tree.unflatten(
+        treedef, [o[1].astype(e.dtype) for o, e in zip(outs, flat_e)])
+    return payloads, DemoState(ef=new_ef, step=state.step + 1)
+
+
+def _is_payload(x):
+    return isinstance(x, Payload)
+
+
+def aggregate(payloads, metas, weights: Optional[jnp.ndarray] = None,
+              normalize: bool = True, apply_sign: bool = True):
+    """Aggregate peer payloads into the global update Δ.
+
+    ``payloads``: either a list (host path) of payload trees, or a single
+    payload tree whose leaves carry a leading peer axis K (all_gather path).
+    Returns a dense pytree Δ shaped like params.
+    """
+    if isinstance(payloads, (list, tuple)):
+        stacked = jax.tree.map(lambda *ps: Payload(
+            vals=jnp.stack([p.vals for p in ps]),
+            idx=jnp.stack([p.idx for p in ps])), *payloads,
+            is_leaf=_is_payload)
+    else:
+        stacked = payloads
+    K = jax.tree.leaves(stacked, is_leaf=_is_payload)[0].vals.shape[0]
+    if weights is None:
+        weights = jnp.full((K,), 1.0 / K, jnp.float32)
+
+    if normalize:
+        # per-peer global L2 over the stacked payload (DCT domain)
+        sq = sum(jnp.sum(p.vals.astype(jnp.float32) ** 2,
+                         axis=tuple(range(1, p.vals.ndim)))
+                 for p in jax.tree.leaves(stacked, is_leaf=_is_payload))
+        inv = 1.0 / (jnp.sqrt(sq) + 1e-12)                    # (K,)
+    else:
+        inv = jnp.ones((K,), jnp.float32)
+    w = (weights * inv).astype(jnp.float32)                   # (K,)
+
+    def combine(p: Payload, m: dct.ChunkMeta):
+        from repro import hints
+        nc, k = p.vals.shape[1], p.vals.shape[2]
+        grid = jnp.zeros((nc, m.s * m.s), jnp.float32)
+        # scatter-add all peers' weighted coefficients into one dense grid
+        rows = jnp.broadcast_to(jnp.arange(nc)[None, :, None], p.idx.shape)
+        grid = grid.at[rows, p.idx].add(
+            p.vals.astype(jnp.float32) * w[:, None, None])
+        grid = hints.constrain_chunks(grid)   # keep the dense fp32 grid
+        delta = dct.decode(grid, m)           # sharded (no-op on hosts)
+        return jnp.sign(delta) if apply_sign else delta
+
+    return jax.tree.map(combine, stacked, metas, is_leaf=_is_payload)
+
+
+def apply_update(params, delta, lr, weight_decay: float = 0.0):
+    """θ ← (1 − α·λ)·θ − α·Δ (decoupled wd, matches AdamW convention)."""
+    def upd(p, d):
+        p32 = p.astype(jnp.float32)
+        if weight_decay:
+            p32 = p32 * (1.0 - lr * weight_decay)
+        return (p32 - lr * d.astype(jnp.float32)).astype(p.dtype)
+    return jax.tree.map(upd, params, delta)
+
+
+def single_peer_delta(payload_tree, metas, apply_sign: bool = True):
+    """Δ for one peer's contribution (validator LossScore path, Algo 1:
+    θ'_p = θ − β·Sign(Δ_p))."""
+    dense = compress.decompress_tree(payload_tree, metas)
+    if apply_sign:
+        dense = jax.tree.map(jnp.sign, dense)
+    return dense

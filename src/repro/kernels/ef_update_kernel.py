@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: fused error-feedback accumulate  e <- beta*e + g.
+
+Pure bandwidth-bound elementwise op; the kernel's job is to stream both
+operands through VMEM exactly once (fp32 accumulate even for bf16 buffers).
+Tensors are flattened and tiled (rows, 1024) to keep lanes full.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024
+DEFAULT_BLOCK_ROWS = 512
+
+
+def _ef_kernel(e_ref, g_ref, o_ref, *, beta: float):
+    e = e_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = (beta * e + g).astype(o_ref.dtype)
+
+
+def ef_update(e: jnp.ndarray, g: jnp.ndarray, beta: float, *,
+              block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool = True) -> jnp.ndarray:
+    """beta * e + g, preserving e's dtype/shape."""
+    shape, dtype = e.shape, e.dtype
+    n = e.size
+    pad = (-n) % LANES
+    ef = jnp.pad(e.reshape(-1), (0, pad)).reshape(-1, LANES)
+    gf = jnp.pad(g.reshape(-1).astype(e.dtype), (0, pad)).reshape(-1, LANES)
+    rows = ef.shape[0]
+    br = min(block_rows, rows)
+    rpad = (-rows) % br
+    if rpad:
+        z = jnp.zeros((rpad, LANES), e.dtype)
+        ef = jnp.concatenate([ef, z])
+        gf = jnp.concatenate([gf, z])
+    grid = (ef.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_ef_kernel, beta=beta),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((br, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(ef.shape, dtype),
+        interpret=interpret,
+    )(ef, gf)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests).
+
+Shapes mirror the kernel entry points exactly:
+    dct2_chunks / idct2_chunks : (NC, s, s) <-> (NC, s, s)
+    topk_chunks                : (NC, E) -> vals (NC, k), idx (NC, k) int32
+    ef_update                  : e, g -> beta * e + g
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.demo.dct import dct_matrix
+
+
+def dct2_chunks(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-chunk 2-D DCT-II. x: (NC, s, s) -> coefficients (NC, s, s)."""
+    m = jnp.asarray(dct_matrix(x.shape[-1]))
+    return jnp.einsum("ij,bjl,kl->bik", m, x.astype(jnp.float32), m)
+
+
+def idct2_chunks(c: jnp.ndarray) -> jnp.ndarray:
+    """Inverse per-chunk 2-D DCT (orthonormal transpose)."""
+    m = jnp.asarray(dct_matrix(c.shape[-1]))
+    return jnp.einsum("ji,bjl,lk->bik", m, c.astype(jnp.float32), m)
+
+
+def topk_chunks(x: jnp.ndarray, k: int):
+    """Top-k by |magnitude| per row. x: (NC, E)."""
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def ef_update(e: jnp.ndarray, g: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """Error-feedback accumulate: beta * e + g (fp32 accumulation)."""
+    return (beta * e.astype(jnp.float32) + g.astype(jnp.float32)).astype(e.dtype)
+
+
+def wkv_chunks(r, k, v, lw, u, *, chunk: int = 64):
+    """Chunked-WKV oracle: the model's own ``rwkv6._chunked_wkv`` on
+    (BH, T, N) strips (heads pre-flattened, as the kernel takes them)."""
+    from repro.models.rwkv6 import MIN_LOG_W, _chunked_wkv
+    BH, T, N = r.shape
+    shape4 = (BH, T, 1, N)
+    o, s = _chunked_wkv(r.reshape(shape4), k.reshape(shape4),
+                        v.reshape(shape4),
+                        jnp.maximum(lw, MIN_LOG_W).reshape(shape4),
+                        u.reshape(1, N), chunk)
+    return o.reshape(BH, T, N), s.reshape(BH, N, N)

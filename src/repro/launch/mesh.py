@@ -1,0 +1,33 @@
+"""Production meshes (TPU v5e-class pods).
+
+``make_production_mesh`` is a FUNCTION (never a module constant) so that
+importing this module does not touch jax device state — smoke tests must
+keep seeing 1 CPU device; only dryrun.py forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)               # 256 chips
+MULTI_POD = (2, 16, 16)             # 2 pods x 256 chips
+
+# v5e-class hardware constants used by the roofline (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12            # per chip
+HBM_BW = 819e9                      # bytes/s per chip
+ICI_BW = 50e9                       # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real local device(s) for tests/examples."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,103 @@
+"""Training launcher: run the production DeMo (or DDP) train step for
+real steps on whatever devices exist.
+
+On this CPU container it runs reduced configs on the host mesh; on a TPU
+pod the same command with ``--mesh single|multi`` builds the production
+mesh and executes the identical StepPlan that the dry-run compiles.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+      --steps 5 --reduced                         # CPU smoke
+  python -m repro.launch.train --arch yi-34b --mesh single ...  # on TPU
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, TrainConfig
+from repro.configs.registry import (ASSIGNED_ARCHS, get_config,
+                                    reduced_config)
+from repro.data import pipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_step
+from repro.models import model as M
+from repro.training.checkpoint import SignedUpdateLog, save_checkpoint
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=list(ASSIGNED_ARCHS) + ["templar-1b"])
+    ap.add_argument("--variant", default="demo", choices=["demo", "ddp"])
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant of the arch (CPU-friendly)")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--checkpoint", default="",
+                    help="save a checkpoint here at the end")
+    args = ap.parse_args(argv)
+
+    cfg = (reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    if args.mesh == "host":
+        cfg = cfg.with_overrides(peer_axes=("data",))
+        mesh = make_host_mesh(data=len(jax.devices()))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    shape = InputShape("cli", seq_len=args.seq, global_batch=args.batch,
+                       kind="train")
+    hp = TrainConfig(learning_rate=1e-3, warmup_steps=2,
+                     total_steps=max(args.steps, 4),
+                     demo_chunk=16, demo_topk=8, demo_beta=0.9)
+    plan = make_step(cfg, hp, mesh, shape, variant=args.variant,
+                     remat=False, ce_chunks=0, donate=False,
+                     microbatch=args.microbatch)
+    print(f"lowering {plan.name} on mesh {dict(mesh.shape)} ...")
+    t0 = time.time()
+    compiled = plan.lower(mesh).compile()
+    print(f"compiled in {time.time() - t0:.1f}s")
+
+    key = jax.random.PRNGKey(hp.seed)
+    scan = plan.name.startswith(("demo_train", "ddp_train"))
+    params = (M.init_params_stacked(cfg, key)
+              if "groups" in [k for k in plan.args[0]] else
+              M.init_params(cfg, key))
+    corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=hp.seed)
+
+    # state arg: EF buffers (demo) / AdamW moments (ddp), zeros like SDS
+    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         plan.args[1])
+    log = SignedUpdateLog()
+    with jax.set_mesh(mesh):
+        for step_i in range(args.steps):
+            batch = pipeline.select_data(corpus, hp.seed, "launcher",
+                                         step_i, args.batch, args.seq)
+            text_len = plan.args[2]["tokens"].shape[1]
+            batch = {k: v[:, :text_len] for k, v in batch.items()}
+            if cfg.frontend is not None:
+                batch.update({
+                    k: v for k, v in pipeline.synthetic_batch(
+                        jax.random.fold_in(key, step_i), cfg.vocab_size,
+                        args.batch, args.seq, cfg).items()
+                    if k in ("patch_embeds", "frames")})
+            t0 = time.time()
+            params, state, loss = compiled(params, state, batch,
+                                           jnp.int32(step_i))
+            jax.block_until_ready(loss)
+            print(f"step {step_i}: loss={float(loss):.4f} "
+                  f"({time.time() - t0:.2f}s)")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.model import (build_model, init_params, loss_fn,  # noqa: F401
+                                decode_step, init_cache, forward)

@@ -1,0 +1,222 @@
+"""GQA attention: training/prefill (full sequence) and single-token decode.
+
+Supports: grouped KV heads, optional QKV bias (qwen2), sliding-window
+attention (mistral/danube/hymba), rope, and ring-buffer KV caches for
+sub-quadratic long-context decode.
+
+Cache layouts:
+  full cache : k,v (B, S_max, Hkv, hd), pos scalar — decode writes at pos.
+  ring cache : k,v (B, W, Hkv, hd),  pos scalar — decode writes at pos % W.
+Keys are stored *post-rope* (rotated at absolute position), the standard
+layout that keeps decode O(window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import hints
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray          # scalar int32: number of tokens already cached
+    # NOTE: ring-ness is static and derived by the caller (model.py) from
+    # (layer_window, seq_len); it is deliberately NOT stored here so the
+    # cache pytree stays trace-safe.
+
+
+def init_attn(key, cfg, d_out_bias=False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    import numpy as np  # dtype resolution only
+    dtype = jnp.dtype(cfg.param_dtype)
+    del np
+    return {
+        "wq": layers.init_linear(ks[0], d, H * hd, dtype, bias=cfg.qkv_bias),
+        "wk": layers.init_linear(ks[1], d, Hkv * hd, dtype, bias=cfg.qkv_bias),
+        "wv": layers.init_linear(ks[2], d, Hkv * hd, dtype, bias=cfg.qkv_bias),
+        "wo": layers.init_linear(ks[3], H * hd, d, dtype, bias=d_out_bias),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(*x.shape[:-1], n_heads, hd)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,Sq,H,hd), k/v (B,Sk,H,hd), mask broadcastable to (B,H,Sq,Sk)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+Q_BLOCK = 512        # q rows per block in the chunked path
+BLOCK_THRESHOLD = 1024
+
+
+def _sdpa_qblocked(q, k, v, window: int, offset: int = 0,
+                   causal: bool = True, q_block: int = Q_BLOCK):
+    """Memory-bounded attention: scan over q-row blocks so the fp32 score
+    buffer is (B,H,q_block,Sk) instead of (B,H,Sq,Sk). Each block is
+    jax.checkpoint'ed — the backward pass recomputes per block instead of
+    storing every block's probabilities. Softmax rows are complete per
+    block (exact numerics, no streaming renormalization needed).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    nq = Sq // q_block
+    if nq * q_block != Sq or Sq <= BLOCK_THRESHOLD:
+        mask = (causal_mask(Sq, Sk, window=window, offset=offset)
+                if causal else jnp.ones((1, 1, Sq, Sk), bool))
+        return _sdpa(q, k, v, mask)
+    qb = q.reshape(B, nq, q_block, H, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        qi, i = inp
+        if causal:
+            mask = causal_mask(q_block, Sk, window=window,
+                               offset=offset + i * q_block)
+        else:
+            mask = jnp.ones((1, 1, q_block, Sk), bool)
+        return carry, _sdpa(qi, k, v, mask)
+
+    _, outs = jax.lax.scan(body, (), (qb, jnp.arange(nq) * 1))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def causal_mask(sq: int, sk: int, window: int = 0, offset: int = 0):
+    """(1,1,sq,sk) bool. offset = absolute position of query 0 minus key 0."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attend_full(p, x, cfg, layer_window: int = 0,
+                positions: Optional[jnp.ndarray] = None):
+    """Training / prefill path: full-sequence causal (optionally windowed)."""
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = _split_heads(layers.linear(p["wq"], x), H, hd)
+    k = _split_heads(layers.linear(p["wk"], x), Hkv, hd)
+    v = _split_heads(layers.linear(p["wv"], x), Hkv, hd)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    k, v = _repeat_kv(k, H // Hkv), _repeat_kv(v, H // Hkv)
+    q, k, v = map(hints.constrain_heads, (q, k, v))
+    out = _sdpa_qblocked(q, k, v, window=layer_window)
+    return layers.linear(p["wo"], out.reshape(B, S, H * hd))
+
+
+def is_ring(layer_window: int, seq_len: int) -> bool:
+    return 0 < layer_window < seq_len
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, layer_window: int,
+                  dtype) -> KVCache:
+    Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    W = layer_window if is_ring(layer_window, seq_len) else seq_len
+    z = jnp.zeros((batch, W, Hkv, hd), dtype)
+    return KVCache(k=z, v=z, pos=jnp.zeros((), jnp.int32))
+
+
+def attend_decode(p, x, cache: KVCache, cfg, layer_window: int = 0,
+                  ring: bool = False):
+    """One-token decode: x (B,1,d) against the cache. Returns (out, cache).
+
+    ``ring`` is a *static* flag: the cache buffer is a ring of size
+    ``layer_window`` rather than the full sequence (sub-quadratic decode).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = cache.pos
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = _split_heads(layers.linear(p["wq"], x), H, hd)
+    k = _split_heads(layers.linear(p["wk"], x), Hkv, hd)
+    v = _split_heads(layers.linear(p["wv"], x), Hkv, hd)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    W = cache.k.shape[1]
+    slot = pos % W if ring else jnp.minimum(pos, W - 1)
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, slot, 0, 0))
+
+    kk = _repeat_kv(new_k.astype(x.dtype), H // Hkv)
+    vv = _repeat_kv(new_v.astype(x.dtype), H // Hkv)
+    # validity mask over cache slots
+    idx = jnp.arange(W)
+    if ring:
+        # age 0 == slot just written; valid if actually filled and in-window
+        age = (slot - idx) % W
+        valid = age <= jnp.minimum(pos, W - 1)
+        if 0 < layer_window < W:
+            valid &= age < layer_window
+    else:
+        valid = idx <= pos
+        if layer_window > 0:
+            valid &= idx > pos - layer_window
+    mask = valid[None, None, None, :]             # (1,1,1,W)
+    out = _sdpa(q, kk, vv, mask)
+    out = layers.linear(p["wo"], out.reshape(B, 1, H * hd))
+    return out, KVCache(k=new_k, v=new_v, pos=pos + 1)
+
+
+# --------------------------------------------------------------- cross-attn
+
+
+def init_cross_attn(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H = cfg.num_heads
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": layers.init_linear(ks[0], d, H * hd, dtype),
+        "wk": layers.init_linear(ks[1], d, H * hd, dtype),
+        "wv": layers.init_linear(ks[2], d, H * hd, dtype),
+        "wo": layers.init_linear(ks[3], H * hd, d, dtype),
+    }
+
+
+def cross_kv(p, enc, cfg):
+    """Precompute encoder K,V (B, F, H, hd) once per sequence."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    return (_split_heads(layers.linear(p["wk"], enc), H, hd),
+            _split_heads(layers.linear(p["wv"], enc), H, hd))
+
+
+def attend_cross(p, x, kv, cfg):
+    """x (B,Sq,d) attends over precomputed encoder kv."""
+    B, Sq, _ = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    k, v = kv
+    q = _split_heads(layers.linear(p["wq"], x), H, hd)
+    q = hints.constrain_heads(q)
+    out = _sdpa_qblocked(q, k.astype(x.dtype), v.astype(x.dtype),
+                         window=0, causal=False)
+    return layers.linear(p["wo"], out.reshape(B, Sq, H * hd))

@@ -1,0 +1,130 @@
+"""Shared neural-net layers (pure functional JAX, no flax).
+
+Params are plain dict pytrees. Initializers take an explicit PRNG key and
+return arrays in ``cfg.param_dtype``; compute casts to ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------- init
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"w": _normal(key, (vocab, d), 0.02, dtype)}
+
+
+def init_rmsnorm(d, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+# ----------------------------------------------------------------- apply
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed(p, tokens, dtype):
+    return p["w"].astype(dtype)[tokens]
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["g"].astype(jnp.float32)).astype(dt)
+
+
+def swiglu(p, x):
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def init_swiglu(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": init_linear(k1, d, d_ff, dtype),
+            "up": init_linear(k2, d, d_ff, dtype),
+            "down": init_linear(k3, d_ff, d, dtype)}
+
+
+# ----------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- loss
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(x: jnp.ndarray, emb_w: jnp.ndarray,
+                          labels: jnp.ndarray, mask: Optional[jnp.ndarray],
+                          num_chunks: int) -> jnp.ndarray:
+    """CE without materializing full (T, V) logits: scan over seq chunks.
+
+    x: (B, S, d) final hidden states; emb_w: (V, d) output embedding.
+    Cuts the logits working set by num_chunks — the beyond-paper memory
+    optimization used by the perf pass for large-vocab archs.
+    """
+    B, S, d = x.shape
+    assert S % num_chunks == 0, (S, num_chunks)
+    cs = S // num_chunks
+    xs = x.reshape(B, num_chunks, cs, d).swapaxes(0, 1)        # (n, B, cs, d)
+    ls = labels.reshape(B, num_chunks, cs).swapaxes(0, 1)
+    ms = (mask.reshape(B, num_chunks, cs).swapaxes(0, 1).astype(jnp.float32)
+          if mask is not None else jnp.ones((num_chunks, B, cs), jnp.float32))
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = (xc @ emb_w.T.astype(xc.dtype)).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll_sum, m_sum = carry
+        return (nll_sum + jnp.sum((lse - gold) * mc), m_sum + jnp.sum(mc)), None
+
+    (nll, m), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                               (xs, ls, ms))
+    return nll / jnp.maximum(m, 1.0)

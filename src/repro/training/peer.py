@@ -1,0 +1,159 @@
+"""Peer node: a permissionless participant in the Gauntlet run.
+
+Behaviours model the paper's simulations (§6 Fig. 2) and threat model (§4):
+  honest      — baseline script: train on assigned data, put in window
+  more_data   — processes 2x tokens per round (paper: 800K vs 400K)
+  lazy        — ignores the assigned subset, trains on random data only
+                (what proof-of-computation is designed to catch)
+  desync      — pauses ``desync_rounds`` rounds, then continues on its own
+                stale model (paper Fig. 2 middle)
+  late        — puts the payload after the put window
+  offline     — registers but never contributes
+  byz_norm    — honest gradient, rescaled 1e4x (norm attack, §4)
+  byz_noise   — valid-format Gaussian-noise payload
+  copycat     — republishes another peer's payload (caught by PoC)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.bucket import BucketStore
+from repro.comms.chain import Chain
+from repro.configs.base import TrainConfig
+from repro.core import byzantine, scores as S
+from repro.demo import compress, optimizer as demo_opt
+from repro.demo.compress import Payload
+
+
+@dataclasses.dataclass
+class PeerConfig:
+    uid: str
+    behavior: str = "honest"
+    data_multiplier: int = 1       # more_data: 2
+    desync_rounds: int = 0         # desync: e.g. 3
+    desync_start: int = 5
+    copy_victim: Optional[str] = None
+
+
+class PeerNode:
+    def __init__(self, pc: PeerConfig, params, metas, grad_fn: Callable,
+                 hp: TrainConfig, chain: Chain, store: BucketStore,
+                 data_fns: Dict[str, Callable]):
+        self.pc = pc
+        self.uid = pc.uid
+        self.params = params                       # local replica
+        self.metas = metas
+        self.grad_fn = grad_fn                     # (params, batch) -> grads
+        self.hp = hp
+        self.chain = chain
+        self.store = store
+        self.data = data_fns
+        self.state = demo_opt.init_state(params)
+        self._paused_until = (pc.desync_start + pc.desync_rounds
+                              if pc.behavior == "desync" else -1)
+        read_key = store.create_bucket(pc.uid)
+        chain.register_peer(pc.uid, read_key)
+        self._local = jax.jit(self._local_impl)
+
+    def _local_impl(self, params, state, batches):
+        """Accumulate grads over the round's micro-batches (more data =>
+        more batches, like the live run's per-round token budget), then one
+        DeMo compress step."""
+        grads = self.grad_fn(params, batches[0])
+        for b in batches[1:]:
+            g2 = self.grad_fn(params, b)
+            grads = jax.tree.map(lambda a, c: a + c, grads, g2)
+        n = float(len(batches))
+        grads = jax.tree.map(lambda g: g / n, grads)
+        return demo_opt.local_step(grads, state, beta=self.hp.demo_beta,
+                                   chunk=self.hp.demo_chunk,
+                                   k=self.hp.demo_topk, metas=self.metas)
+
+    def _paused(self, round_idx: int) -> bool:
+        return (self.pc.behavior == "desync"
+                and self.pc.desync_start <= round_idx < self._paused_until)
+
+    # ---------------------------------------------------------- produce
+    def produce(self, round_idx: int) -> None:
+        """Compute + publish this round's pseudo-gradient."""
+        b = self.pc.behavior
+        if b == "offline" or self._paused(round_idx):
+            return
+        if b == "copycat" and self.pc.copy_victim:
+            try:
+                rk = self.chain.peers[self.pc.copy_victim].bucket_read_key
+                victim, _ = self.store.get_gradient(self.pc.copy_victim,
+                                                    round_idx, rk)
+                payload = byzantine.copy_payload(victim)
+            except Exception:
+                return
+        else:
+            batch = self.data["assigned"](self.uid, round_idx)
+            if b == "lazy":
+                batch = self.data["unassigned"](self.uid, round_idx)
+            batches = [batch]
+            for j in range(self.pc.data_multiplier - 1):
+                batches.append(self.data["unassigned"](
+                    self.uid, round_idx * 7919 + 13 + j))
+            payload, self.state = self._local(self.params, self.state,
+                                              batches)
+            if b == "byz_norm":
+                payload = byzantine.norm_attack(payload)
+            elif b == "byz_noise":
+                payload = byzantine.noise_attack(
+                    payload, jax.random.PRNGKey(round_idx))
+        size = compress.payload_bytes(payload)
+        if b == "late":
+            # simulate missing the window: stamp after window close
+            saved = self.chain._block
+            self.chain._block = ((round_idx + 1)
+                                 * self.chain.blocks_per_round + 1)
+            self.store.put_gradient(self.uid, round_idx, payload, size)
+            self.chain._block = saved
+        else:
+            self.store.put_gradient(self.uid, round_idx, payload, size)
+        # sync sample (2 values/tensor, §3.2)
+        sample = S.sample_params_for_sync(self.params,
+                                          jax.random.PRNGKey(round_idx))
+        try:
+            self.store.buckets[self.uid].put(f"sync/round-{round_idx:08d}",
+                                             sample, self.chain.block, 8)
+        except KeyError:
+            pass
+
+    # ---------------------------------------------------------- consume
+    def apply_round(self, round_idx: int, weights: Dict[str, float],
+                    lr: float) -> None:
+        """Coordinated aggregation (§3.3): apply the validator-published
+        top-G aggregation to the local replica to stay in sync. Peers apply
+        the SAME rules as the validator — including ignoring payloads put
+        outside the window — otherwise they drift from θ^validator."""
+        if self._paused(round_idx):
+            return
+        contributors = [p for p, w in weights.items() if w > 0
+                        and self.store.within_put_window(
+                            p, round_idx, self.chain.blocks_per_round)]
+        payloads = []
+        for p in contributors:
+            try:
+                rk = self.chain.peers[p].bucket_read_key
+                pl_, _ = self.store.get_gradient(p, round_idx, rk)
+                payloads.append(pl_)
+            except Exception:
+                continue
+        if not payloads:
+            return
+        stacked = jax.tree.map(
+            lambda *ps: Payload(vals=jnp.stack([q.vals for q in ps]),
+                                idx=jnp.stack([q.idx for q in ps])),
+            *payloads, is_leaf=lambda x: isinstance(x, Payload))
+        if not hasattr(self, "_agg"):
+            self._agg = jax.jit(lambda st: demo_opt.aggregate(
+                st, self.metas, normalize=True, apply_sign=True))
+        delta = self._agg(stacked)
+        self.params = demo_opt.apply_update(self.params, delta, lr)

@@ -1,0 +1,96 @@
+"""End-to-end Gauntlet simulation driver: chain + buckets + peers +
+validator, one communication round at a time (the paper's full system at
+laptop scale; benchmarks and integration tests run through this)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.bucket import BucketStore
+from repro.comms.chain import Chain
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.gauntlet import RoundReport, Validator
+from repro.data import pipeline
+from repro.demo import compress
+from repro.models import model as M
+from repro.training.peer import PeerConfig, PeerNode
+
+
+@dataclasses.dataclass
+class SimResult:
+    reports: List[RoundReport]
+    val_losses: List[float]
+    validator: Validator
+    peers: Dict[str, PeerNode]
+
+
+def build_sim(cfg: ModelConfig, hp: TrainConfig,
+              peer_configs: List[PeerConfig],
+              batch: int = 8, seq_len: int = 128,
+              corpus: Optional[pipeline.MarkovCorpus] = None,
+              eval_batch: int = 8):
+    """Wire up a complete permissionless run."""
+    corpus = corpus or pipeline.MarkovCorpus(cfg.vocab_size, seed=hp.seed)
+    chain = Chain(blocks_per_round=10)
+    store = BucketStore(chain)
+
+    def assigned(peer: str, rnd: int):
+        return pipeline.select_data(corpus, hp.seed, peer, rnd, batch,
+                                    seq_len)
+
+    def unassigned(peer: str, rnd: int):
+        return pipeline.unassigned_data(corpus, hp.seed, peer, rnd,
+                                        eval_batch, seq_len)
+
+    data_fns = {"assigned": assigned, "unassigned": unassigned}
+
+    key = jax.random.PRNGKey(hp.seed)
+    params = M.init_params(cfg, key)
+    metas = compress.tree_meta(params, hp.demo_chunk)
+
+    def eval_loss(p, b):
+        return M.loss_fn(p, b, cfg)[0]
+
+    eval_loss_j = jax.jit(eval_loss)
+
+    def grad_fn(p, b):
+        return jax.grad(lambda pp: M.loss_fn(pp, b, cfg)[0])(p)
+
+    validator = Validator("validator-0", params, metas, eval_loss_j, hp,
+                          chain, store, data_fns,
+                          rng=np.random.RandomState(hp.seed))
+    peers = {}
+    for pc in peer_configs:
+        peers[pc.uid] = PeerNode(pc, params, metas, grad_fn, hp, chain,
+                                 store, data_fns)
+    return validator, peers, chain, store, corpus
+
+
+def run_rounds(validator: Validator, peers: Dict[str, PeerNode],
+               chain: Chain, num_rounds: int,
+               eval_every: int = 5,
+               eval_batch_fn: Optional[Callable] = None,
+               fast_set_size: Optional[int] = None) -> SimResult:
+    reports, val_losses = [], []
+    for rnd in range(num_rounds):
+        # --- peers publish within the put window
+        for peer in peers.values():
+            peer.produce(rnd)
+        chain.advance(chain.blocks_per_round)  # window closes
+        # --- validator evaluates + aggregates
+        rep = validator.run_round(rnd, list(peers.keys()),
+                                  fast_set_size=fast_set_size)
+        # --- coordinated aggregation on every peer
+        for peer in peers.values():
+            peer.apply_round(rnd, rep.weights, rep.lr)
+        if eval_batch_fn is not None and rnd % eval_every == 0:
+            b = eval_batch_fn(rnd)
+            rep.train_loss = float(validator.eval_loss(validator.params, b))
+            val_losses.append(rep.train_loss)
+        reports.append(rep)
+    return SimResult(reports=reports, val_losses=val_losses,
+                     validator=validator, peers=peers)

@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests must
+see the real single CPU device; only dryrun subprocesses force 512."""
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from repro.configs.registry import tiny_config
+    return tiny_config()

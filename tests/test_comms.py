@@ -1,0 +1,74 @@
+"""Chain + bucket store semantics the incentive layer depends on."""
+import pytest
+
+from repro.comms.bucket import BucketStore
+from repro.comms.chain import Chain
+
+
+def _setup():
+    chain = Chain(blocks_per_round=10)
+    store = BucketStore(chain)
+    rk = store.create_bucket("peer-a")
+    chain.register_peer("peer-a", rk)
+    return chain, store, rk
+
+
+def test_put_window_accepts_in_window():
+    chain, store, rk = _setup()
+    chain.advance(3)                      # inside round 0 window
+    store.put_gradient("peer-a", 0, {"x": 1}, 10)
+    assert store.within_put_window("peer-a", 0, 10)
+
+
+def test_put_window_rejects_late():
+    chain, store, rk = _setup()
+    chain.advance(11)                     # round 0 window closed
+    store.put_gradient("peer-a", 0, {"x": 1}, 10)
+    assert not store.within_put_window("peer-a", 0, 10)
+
+
+def test_put_window_rejects_missing():
+    chain, store, rk = _setup()
+    assert not store.within_put_window("peer-a", 0, 10)
+
+
+def test_objects_immutable():
+    chain, store, rk = _setup()
+    store.put_gradient("peer-a", 0, {"x": 1}, 10)
+    with pytest.raises(KeyError):
+        store.put_gradient("peer-a", 0, {"x": 2}, 10)
+
+
+def test_read_key_gating():
+    chain, store, rk = _setup()
+    store.put_gradient("peer-a", 0, {"x": 1}, 10)
+    with pytest.raises(PermissionError):
+        store.get_gradient("peer-a", 0, "wrong-key")
+    val, meta = store.get_gradient("peer-a", 0, rk)
+    assert val == {"x": 1} and meta.size_bytes == 10
+
+
+def test_permissionless_registration():
+    chain = Chain()
+    for i in range(50):
+        chain.register_peer(f"anon-{i}", f"rk-{i}")
+    assert len(chain.peers) == 50
+
+
+def test_consensus_weights_stake_median():
+    chain = Chain()
+    chain.register_validator("v1", stake=100.0)
+    chain.register_validator("v2", stake=100.0)
+    chain.register_validator("v3", stake=1.0)     # tiny stake outlier
+    chain.post_weights("v1", {"a": 0.6, "b": 0.4})
+    chain.post_weights("v2", {"a": 0.6, "b": 0.4})
+    chain.post_weights("v3", {"a": 0.0, "b": 1.0})  # dishonest
+    w = chain.consensus_weights()
+    assert abs(w["a"] - 0.6) < 1e-6 and abs(w["b"] - 0.4) < 1e-6
+
+
+def test_checkpoint_pointer_is_top_staked():
+    chain = Chain()
+    chain.register_validator("small", stake=10.0)
+    chain.register_validator("big", stake=1000.0)
+    assert chain.checkpoint_pointer == "big"

@@ -1,0 +1,58 @@
+"""Top-k compression + payload utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.demo import compress, dct
+from repro.demo.compress import Payload
+
+
+def test_topk_selects_largest_magnitudes():
+    x = jnp.asarray([[1.0, -5.0, 3.0, 0.5], [0.0, 2.0, -2.5, 0.1]])
+    p = compress.topk_compress(x, 2)
+    np.testing.assert_allclose(np.sort(np.abs(np.asarray(p.vals)), -1),
+                               [[3.0, 5.0], [2.0, 2.5]])
+
+
+def test_decompress_inverts_compress_at_full_k():
+    x = jax.random.normal(jax.random.PRNGKey(0), (10, 32))
+    p = compress.topk_compress(x, 32)
+    y = compress.topk_decompress(p, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_normalize_payload_unit_norm():
+    tree = {"a": compress.topk_compress(
+        jax.random.normal(jax.random.PRNGKey(1), (5, 16)) * 1e4, 4)}
+    n = compress.normalize_payload(tree)
+    assert abs(float(compress.payload_global_norm(n)) - 1.0) < 1e-5
+
+
+def test_payload_bytes_counts_vals_and_idx():
+    tree = {"a": Payload(vals=jnp.zeros((10, 4), jnp.float32),
+                         idx=jnp.zeros((10, 4), jnp.int32))}
+    assert compress.payload_bytes(tree) == 10 * 4 * 4 + 10 * 4 * 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(nc=st.integers(1, 20), k=st.integers(1, 16))
+def test_topk_energy_dominance(nc, k):
+    """Kept coefficients carry at least as much energy as any other k."""
+    e = 32
+    k = min(k, e)
+    x = jax.random.normal(jax.random.PRNGKey(nc * 31 + k), (nc, e))
+    p = compress.topk_compress(x, k)
+    kept = np.sum(np.asarray(p.vals) ** 2, -1)
+    total = np.sum(np.asarray(x) ** 2, -1)
+    # kept >= k/e share of total energy (top-k is at least average)
+    assert (kept >= total * k / e - 1e-5).all()
+
+
+def test_compress_tree_roundtrip_structure():
+    params = {"w": jnp.zeros((32, 16)), "b": jnp.zeros((16,))}
+    metas = compress.tree_meta(params, 8)
+    payloads = compress.compress_tree(params, metas, 4)
+    dense = compress.decompress_tree(payloads, metas)
+    assert jax.tree.structure(dense) == jax.tree.structure(params)
+    assert dense["w"].shape == (32, 16)

@@ -1,0 +1,62 @@
+"""Chunked-DCT transform: orthogonality, roundtrip, canonicalization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.demo import dct
+
+
+def test_dct_matrix_orthonormal():
+    for s in (8, 16, 64):
+        m = dct.dct_matrix(s)
+        np.testing.assert_allclose(m @ m.T, np.eye(s), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 64), (100, 50), (64,), (7,),
+                                   (33, 7, 5), (3, 128, 65)])
+@pytest.mark.parametrize("s", [8, 16])
+def test_roundtrip(shape, s):
+    m = dct.chunk_meta(shape, s)
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    y = dct.decode(dct.encode(x, m), m)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
+
+def test_encode_shape():
+    m = dct.chunk_meta((100, 50), 16)
+    x = jnp.ones((100, 50))
+    c = dct.encode(x, m)
+    assert c.shape == (m.num_chunks, 16 * 16)
+    assert m.rows == 7 and m.cols == 4
+
+
+def test_energy_preservation():
+    """Orthonormal transform preserves L2 (on padded grid)."""
+    m = dct.chunk_meta((64, 64), 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    c = dct.encode(x, m)
+    np.testing.assert_allclose(float(jnp.sum(c ** 2)),
+                               float(jnp.sum(x ** 2)), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d0=st.integers(1, 70), d1=st.integers(1, 70),
+       s=st.sampled_from([4, 8, 16]))
+def test_roundtrip_property(d0, d1, s):
+    shape = (d0, d1)
+    m = dct.chunk_meta(shape, s)
+    x = jax.random.normal(jax.random.PRNGKey(d0 * 97 + d1), shape)
+    y = dct.decode(dct.encode(x, m), m)
+    assert float(jnp.max(jnp.abs(y - x))) < 1e-4
+
+
+def test_dc_coefficient_is_mean():
+    """Coefficient (0,0) of each chunk = s * mean of the chunk."""
+    s = 8
+    m = dct.chunk_meta((8, 8), s)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 8))
+    c = dct.encode(x, m).reshape(s, s)
+    np.testing.assert_allclose(float(c[0, 0]), float(jnp.mean(x)) * s,
+                               rtol=1e-4)

@@ -1,0 +1,35 @@
+"""CLI launcher smoke tests: train/serve on reduced configs, 1 device."""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(mod, *argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-m", mod, *argv], env=env,
+                          capture_output=True, text=True, timeout=540)
+
+
+def test_train_cli_demo():
+    p = _run("repro.launch.train", "--arch", "qwen2-1.5b", "--reduced",
+             "--steps", "2")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "ok" in p.stdout and "loss=" in p.stdout
+
+
+def test_train_cli_ddp():
+    p = _run("repro.launch.train", "--arch", "whisper-base", "--reduced",
+             "--steps", "2", "--variant", "ddp")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "ok" in p.stdout
+
+
+def test_serve_cli():
+    p = _run("repro.launch.serve", "--arch", "rwkv6-3b", "--reduced",
+             "--tokens", "4")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "ok" in p.stdout and "decoded" in p.stdout

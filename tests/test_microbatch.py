@@ -1,0 +1,92 @@
+"""Gradient accumulation (make_grad_fn) must match full-batch gradients
+exactly (same loss-mean semantics), and the Gauntlet scoring pipeline
+must hold its invariants under hypothesis-generated score inputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import tiny_config
+from repro.core import scores as S
+from repro.data.pipeline import synthetic_batch
+from repro.launch.steps import make_grad_fn
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("micro", [2, 4])
+def test_microbatch_grads_match_full(micro):
+    cfg = tiny_config()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    batch = synthetic_batch(key, cfg.vocab_size, 8, 32, cfg)
+
+    def loss_of(p, b):
+        return M.loss_fn(p, b, cfg)[0]
+
+    # full-batch reference: mean of per-microbatch losses == full loss
+    # only when every microbatch has equal token counts (true here)
+    l_full, g_full = jax.value_and_grad(loss_of)(params, batch)
+    l_mb, g_mb = make_grad_fn(loss_of, micro)(params, batch)
+    np.testing.assert_allclose(float(l_full), float(l_mb), rtol=2e-5)
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_mb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-6)
+
+
+def test_microbatch_one_is_identity():
+    cfg = tiny_config()
+    fn = make_grad_fn(lambda p, b: M.loss_fn(p, b, cfg)[0], 1)
+    # microbatch=1 returns plain value_and_grad (no scan wrapper)
+    assert fn.__name__ != "grad_of"
+
+
+# ---------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.dictionaries(st.text(min_size=1, max_size=4),
+                       st.floats(-100, 100, allow_nan=False),
+                       min_size=1, max_size=12),
+       st.floats(1.0, 4.0))
+def test_normalize_scores_invariants(scores, power):
+    norm = S.normalize_scores(scores, power)
+    assert set(norm) == set(scores)
+    vals = np.array(list(norm.values()))
+    assert np.all(vals >= 0)
+    assert abs(vals.sum() - 1.0) < 1e-6
+    # order preserved: higher raw score -> >= normalized share
+    items = sorted(scores, key=scores.get)
+    for a, b in zip(items, items[1:]):
+        assert norm[a] <= norm[b] + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.dictionaries(st.integers(0, 30).map(str),
+                       st.floats(0, 1, allow_nan=False),
+                       min_size=1, max_size=20),
+       st.integers(1, 10))
+def test_top_g_weights_invariants(norm_scores, g):
+    w = S.top_g_weights(norm_scores, g)
+    nz = [p for p, v in w.items() if v > 0]
+    assert len(nz) == min(g, len(norm_scores))
+    assert abs(sum(w.values()) - 1.0) < 1e-9
+    # every non-winner scores <= every winner
+    losers = [p for p in w if w[p] == 0]
+    if nz and losers:
+        assert max(norm_scores[p] for p in losers) <= min(
+            norm_scores[p] for p in nz) + 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-1, 1), st.floats(-10, 10), st.floats(-10, 10),
+       st.floats(0.5, 0.99))
+def test_poc_update_bounded(mu, sa, sr, gamma):
+    out = S.poc_update(mu, sa, sr, gamma)
+    assert -1.0 <= out <= 1.0 or abs(out) <= abs(mu)  # contraction to [-1,1]
+    # fixed point: repeated positive evidence drives mu -> 1 (the EMA
+    # time-constant is 1/(1-gamma) rounds)
+    m = mu
+    for _ in range(int(6.0 / (1.0 - gamma)) + 1):
+        m = S.poc_update(m, 1.0, 0.0, gamma)
+    assert m > 0.9

@@ -1,0 +1,79 @@
+"""Plackett–Luce rating properties (our OpenSkill reimplementation)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.openskill import PlackettLuce, Rating, RatingBook
+
+
+def test_winner_gains_loser_drops():
+    pl = PlackettLuce()
+    a, b = Rating(), Rating()
+    na, nb = pl.rate([a, b], [0, 1])
+    assert na.mu > a.mu and nb.mu < b.mu
+
+
+def test_sigma_contracts():
+    pl = PlackettLuce()
+    out = pl.rate([Rating(), Rating(), Rating()], [0, 1, 2])
+    assert all(r.sigma < 25.0 / 3.0 for r in out)
+
+
+def test_rank_order_monotone_in_mu_delta():
+    """Middle finisher moves less than the winner."""
+    pl = PlackettLuce()
+    rs = pl.rate([Rating(), Rating(), Rating()], [0, 1, 2])
+    assert rs[0].mu > rs[1].mu > rs[2].mu
+
+
+def test_upset_moves_more():
+    """A low-rated peer beating a high-rated one gains more than in an
+    expected win."""
+    pl = PlackettLuce()
+    low, high = Rating(mu=20), Rating(mu=30)
+    up, _ = pl.rate([low, high], [0, 1])          # upset
+    exp_, _ = pl.rate([Rating(mu=30), Rating(mu=20)], [0, 1])
+    assert (up.mu - low.mu) > (exp_.mu - 30.0)
+
+
+def test_repeated_wins_converge_above():
+    book = RatingBook()
+    for _ in range(30):
+        book.match({"strong": 1.0, "weak": 0.0})
+    assert book.ordinal("strong") > book.ordinal("weak")
+    assert book.get("strong").mu > 25 > book.get("weak").mu
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 8), seed=st.integers(0, 100))
+def test_total_mu_roughly_conserved(n, seed):
+    """PL updates approximately conserve total mu in a match of equals."""
+    pl = PlackettLuce()
+    rng = np.random.RandomState(seed)
+    ranks = list(rng.permutation(n))
+    out = pl.rate([Rating() for _ in range(n)], ranks)
+    assert abs(sum(r.mu for r in out) - 25.0 * n) < 1.0
+
+
+def test_sparse_evaluation_separates_quality():
+    """Paper's use-case: random small matches still order peers by the
+    underlying quality that drives their scores."""
+    rng = np.random.RandomState(0)
+    quality = {"p0": 0.0, "p1": 0.5, "p2": 1.0, "p3": 1.5, "p4": 2.0}
+    book = RatingBook()
+    peers = list(quality)
+    for _ in range(60):
+        sel = list(rng.choice(peers, size=3, replace=False))
+        scores = {p: quality[p] + rng.randn() * 0.3 for p in sel}
+        book.match(scores)
+    ords = {p: book.ordinal(p) for p in peers}
+    assert ords["p4"] > ords["p0"]
+    assert ords["p3"] > ords["p1"]
+
+
+def test_ties_split_evenly():
+    pl = PlackettLuce()
+    a, b = pl.rate([Rating(), Rating()], [0, 0])
+    assert math.isclose(a.mu, b.mu, rel_tol=1e-9)

@@ -1,0 +1,111 @@
+"""Recurrent-layer correctness: chunked parallel forms vs exact recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models import rwkv6, ssm
+
+
+def _rwkv_cfg(chunk):
+    import dataclasses
+    cfg = reduced_config("rwkv6-3b")
+    return cfg.with_overrides(ssm=dataclasses.replace(cfg.ssm,
+                                                      chunk_len=chunk))
+
+
+def test_rwkv_chunk_invariance():
+    """Chunk size must not change the output (associativity of the scan)."""
+    key = jax.random.PRNGKey(0)
+    outs = []
+    for chunk in (8, 16, 64):
+        cfg = _rwkv_cfg(chunk)
+        p = rwkv6.init_time_mix(jax.random.PRNGKey(42), cfg)
+        x = 0.1 * jax.random.normal(key, (2, 64, cfg.d_model))
+        o, _ = rwkv6.time_mix(p, x, cfg)
+        outs.append(np.asarray(o))
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=2e-4)
+
+
+def test_rwkv_chunked_equals_recurrent_step():
+    cfg = _rwkv_cfg(16)
+    p = rwkv6.init_time_mix(jax.random.PRNGKey(1), cfg)
+    B, T = 2, 32
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (B, T, cfg.d_model))
+    o_par, _ = rwkv6.time_mix(p, x, cfg)
+    st = rwkv6.init_rwkv_state(cfg, B, x.dtype)
+    outs = []
+    for t in range(T):
+        o, st = rwkv6.time_mix_step(p, x[:, t:t + 1], st, cfg)
+        outs.append(o)
+    o_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(o_par), np.asarray(o_seq),
+                               atol=2e-4)
+
+
+def test_rwkv_state_decay_bounded():
+    """Data-dependent decays stay in (0, 1] — state cannot blow up."""
+    cfg = _rwkv_cfg(16)
+    p = rwkv6.init_time_mix(jax.random.PRNGKey(3), cfg)
+    st = rwkv6.init_rwkv_state(cfg, 1, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 1, cfg.d_model)) * 10
+    for _ in range(50):
+        _, st = rwkv6.time_mix_step(p, x, st, cfg)
+    assert bool(jnp.isfinite(st.wkv).all())
+
+
+def test_ssm_chunked_equals_step():
+    cfg = reduced_config("hymba-1.5b")
+    p = ssm.init_ssm(jax.random.PRNGKey(5), cfg)
+    B, T = 2, 32
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(6), (B, T, cfg.d_model))
+    y_par, st_end = ssm.ssm_seq(p, x, cfg)
+    st = ssm.init_ssm_state(cfg, B, x.dtype)
+    outs = []
+    for t in range(T):
+        y, st = ssm.ssm_step(p, x[:, t:t + 1], st, cfg)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_end.h), np.asarray(st.h),
+                               atol=2e-4)
+
+
+def test_ssm_chunk_invariance():
+    import dataclasses
+    cfg = reduced_config("hymba-1.5b")
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(7), (2, 64, cfg.d_model))
+    outs = []
+    for chunk in (8, 32, 64):
+        c2 = cfg.with_overrides(ssm=dataclasses.replace(cfg.ssm,
+                                                        chunk_len=chunk))
+        p = ssm.init_ssm(jax.random.PRNGKey(8), c2)
+        y, _ = ssm.ssm_seq(p, x, c2)
+        outs.append(np.asarray(y))
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=2e-4)
+
+
+def test_rwkv_carried_state_decode_continuity():
+    """Decoding continues exactly from a mid-sequence state."""
+    cfg = _rwkv_cfg(8)
+    p = rwkv6.init_time_mix(jax.random.PRNGKey(9), cfg)
+    B, T = 1, 24
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(10), (B, T, cfg.d_model))
+    # run fully step-by-step
+    st = rwkv6.init_rwkv_state(cfg, B, x.dtype)
+    full = []
+    for t in range(T):
+        o, st = rwkv6.time_mix_step(p, x[:, t:t + 1], st, cfg)
+        full.append(o)
+    # replay last half from a checkpointed state
+    st2 = rwkv6.init_rwkv_state(cfg, B, x.dtype)
+    for t in range(T // 2):
+        _, st2 = rwkv6.time_mix_step(p, x[:, t:t + 1], st2, cfg)
+    for t in range(T // 2, T):
+        o2, st2 = rwkv6.time_mix_step(p, x[:, t:t + 1], st2, cfg)
+        np.testing.assert_allclose(np.asarray(o2),
+                                   np.asarray(full[t]), atol=1e-5)

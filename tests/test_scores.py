@@ -1,0 +1,71 @@
+"""Gauntlet scoring primitives (eqs. 2-6)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scores as S
+
+
+def _quad_loss(params, batch):
+    return float(jnp.sum(params["w"] ** 2))
+
+
+def test_loss_score_positive_for_descent():
+    params = {"w": jnp.ones((4,))}
+    delta = {"w": jnp.sign(params["w"])}          # true descent direction
+    s = S.loss_score(_quad_loss, params, delta, None, beta=0.1)
+    assert s > 0
+
+
+def test_loss_score_negative_for_ascent():
+    params = {"w": jnp.ones((4,))}
+    delta = {"w": -jnp.sign(params["w"])}
+    s = S.loss_score(_quad_loss, params, delta, None, beta=0.1)
+    assert s < 0
+
+
+def test_poc_update_ema():
+    mu = S.poc_update(0.0, score_assigned=1.0, score_rand=0.5, gamma=0.9)
+    assert np.isclose(mu, 0.1)
+    mu = S.poc_update(mu, 0.1, 0.7, gamma=0.9)    # assigned worse
+    assert np.isclose(mu, 0.09 - 0.1)
+
+
+def test_sync_score_counts_steps():
+    """Sign-quantized divergence of ~k steps gives score ~k."""
+    alpha = 0.01
+    tv = np.zeros(100)
+    tp = tv + 3 * alpha * np.random.RandomState(0).choice([-1, 1], 100)
+    assert abs(S.sync_score(tv, tp, alpha) - 3.0) < 1e-6
+
+
+def test_normalize_scores_sums_to_one_and_power():
+    norm = S.normalize_scores({"a": 3.0, "b": 1.0, "c": 0.0}, power=2.0)
+    assert abs(sum(norm.values()) - 1.0) < 1e-9
+    # (3-0)^2 : (1-0)^2 : 0 = 9 : 1 : 0
+    assert abs(norm["a"] / norm["b"] - 9.0) < 1e-6
+    assert norm["c"] == 0.0
+
+
+def test_normalize_scores_all_equal():
+    norm = S.normalize_scores({"a": 5.0, "b": 5.0})
+    assert abs(sum(norm.values()) - 1.0) < 1e-9
+
+
+def test_top_g_weights():
+    w = S.top_g_weights({"a": 0.5, "b": 0.3, "c": 0.2}, g=2)
+    assert w == {"a": 0.5, "b": 0.5, "c": 0.0}
+
+
+def test_top_g_weights_fewer_peers_than_g():
+    w = S.top_g_weights({"a": 1.0}, g=15)
+    assert w == {"a": 1.0}
+
+
+def test_sample_params_for_sync_deterministic():
+    import jax
+    params = {"w": jnp.arange(100.0), "b": jnp.arange(10.0)}
+    s1 = S.sample_params_for_sync(params, jax.random.PRNGKey(7))
+    s2 = S.sample_params_for_sync(params, jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(s1, s2)
+    assert s1.size == 4   # 2 per tensor

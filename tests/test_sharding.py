@@ -1,0 +1,109 @@
+"""Sharding rules: every assigned arch's param/batch/cache specs are
+divisibility-valid on the production meshes (pure shape math — no devices
+needed, uses AbstractMesh)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import SHAPES
+from repro.launch import steps
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _check_divisible(spec_tree, sds_tree, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    leaves_s = jax.tree.leaves(spec_tree,
+                               is_leaf=lambda x: isinstance(x, P))
+    leaves_x = jax.tree.leaves(sds_tree)
+    assert len(leaves_s) == len(leaves_x)
+    for spec, leaf in zip(leaves_s, leaves_x):
+        for i, entry in enumerate(tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            assert leaf.shape[i] % prod == 0, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_divisible(arch, multi):
+    cfg = get_config(arch)
+    mesh = _mesh(multi)
+    p_sds = steps.param_shapes(cfg)
+    specs = sh.param_specs(cfg, p_sds, mesh)
+    _check_divisible(specs, p_sds, mesh)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_ef_specs_divisible(arch):
+    cfg = get_config(arch)
+    mesh = _mesh(True)
+    p_sds = steps.param_shapes(cfg)
+    K = sh.num_peers(cfg, mesh)
+    ef_sds = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((K,) + l.shape, jnp.float32), p_sds)
+    specs = sh.ef_specs(cfg, p_sds, mesh)
+    _check_divisible(specs, ef_sds, mesh)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_batch_and_cache_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if (arch, shape_name) in {("whisper-base", "long_500k")}:
+        pytest.skip("skipped combo (DESIGN.md §5)")
+    mesh = _mesh(False)
+    if shape.is_decode:
+        if shape_name == "long_500k":
+            cfg = steps.long_context_variant(cfg)
+        c_sds = steps.cache_shapes(cfg, shape)
+        specs = sh.cache_specs(cfg, c_sds, mesh, shape)
+        _check_divisible(specs, c_sds, mesh)
+    else:
+        b_sds = steps.input_specs(cfg, shape)
+        dp = (sh.effective_peer_axes(cfg, mesh) if shape.kind == "train"
+              else sh.dp_axes_for_serving(mesh))
+        specs = sh.batch_specs(cfg, b_sds, dp, mesh)
+        _check_divisible(specs, b_sds, mesh)
+
+
+def test_fit_spec_degrades_uneven():
+    mesh = _mesh(False)
+    assert sh.fit_spec(P("model", None), (51865, 4), mesh) == P(None, None)
+    assert sh.fit_spec(P("model", None), (64, 4), mesh) == P("model", None)
+    assert sh.fit_spec(P(("model", "data"), None), (160, 4), mesh) \
+        == P("model", None)
+
+
+def test_tp_axes_per_arch():
+    mesh = _mesh(True)
+    dsv2 = get_config("deepseek-v2-236b")
+    assert sh.effective_peer_axes(dsv2, mesh) == ("pod",)
+    assert sh.tp_axes(dsv2, mesh) == ("model", "data")
+    qwen = get_config("qwen2-1.5b")
+    assert sh.effective_peer_axes(qwen, mesh) == ("pod", "data")
+    assert sh.tp_axes(qwen, mesh) == ("model",)
+    assert sh.num_peers(qwen, mesh) == 32
+
+
+def test_expert_banks_sharded_over_model():
+    cfg = get_config("deepseek-moe-16b")
+    mesh = _mesh(False)
+    p_sds = steps.param_shapes(cfg)
+    specs = sh.param_specs(cfg, p_sds, mesh)
+    es = specs["layers"][2]["moe"]["experts"]["gate"]
+    assert tuple(es)[0] == "model"
