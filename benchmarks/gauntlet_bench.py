@@ -1,0 +1,134 @@
+"""Gauntlet round-evaluation latency vs. peer count.
+
+Measures the validator's full round pipeline (fast-filter → batched
+primary-eval → scoreboard → aggregate) at 8/16/32/64 peers and reports
+
+  * wall time per round (first round = compile, then steady-state median)
+  * compiled-call dispatches per round (``Validator.compiled_calls``)
+
+The batched stages issue O(1) compiled calls per round — the per-peer
+loop implementation issued 4·|S_t| (+1 aggregate) — so steady-state
+round latency should grow sub-linearly in the peer count while the
+dispatch count stays flat.
+
+Peers are simulated by publishing format-valid random payloads through a
+single shared jitted compressor (real PeerNodes would add one local-step
+compile per peer, which is peer-side cost, not what this bench measures).
+
+Run:  PYTHONPATH=src python benchmarks/gauntlet_bench.py [--rounds N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "benchmarks")
+import common  # noqa: E402
+
+from repro.comms.bucket import BucketStore          # noqa: E402
+from repro.comms.chain import Chain                 # noqa: E402
+from repro.configs.base import TrainConfig          # noqa: E402
+from repro.configs.registry import tiny_config      # noqa: E402
+from repro.core import scores as S                  # noqa: E402
+from repro.core.gauntlet import Validator           # noqa: E402
+from repro.data import pipeline                     # noqa: E402
+from repro.demo import compress                     # noqa: E402
+from repro.models import model as M                 # noqa: E402
+
+BATCH, SEQ = 2, 32
+
+
+def build(num_peers: int, seed: int = 0):
+    cfg = tiny_config()
+    hp = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=1000,
+                     top_g=min(4, num_peers), eval_set_size=num_peers,
+                     demo_chunk=16, demo_topk=8)
+    corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=seed)
+    chain = Chain(blocks_per_round=10)
+    store = BucketStore(chain)
+    data_fns = {
+        "assigned": lambda p, r: pipeline.select_data(
+            corpus, seed, p, r, BATCH, SEQ),
+        "unassigned": lambda p, r: pipeline.unassigned_data(
+            corpus, seed, p, r, BATCH, SEQ),
+    }
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    metas = compress.tree_meta(params, hp.demo_chunk)
+    eval_loss = jax.jit(lambda p, b: M.loss_fn(p, b, cfg)[0])
+    validator = Validator("validator-0", params, metas, eval_loss, hp,
+                          chain, store, data_fns,
+                          rng=np.random.RandomState(seed))
+    uids = [f"peer-{i:02d}" for i in range(num_peers)]
+    for uid in uids:
+        chain.register_peer(uid, store.create_bucket(uid))
+    # one shared jitted compressor for every simulated peer
+    compress_fn = jax.jit(
+        lambda t: compress.compress_tree(t, metas, hp.demo_topk))
+    return validator, chain, store, uids, compress_fn
+
+
+def publish_round(validator, chain, store, uids, compress_fn, rnd: int):
+    sync = S.sample_params_for_sync(validator.params,
+                                    jax.random.PRNGKey(rnd))
+    key = jax.random.PRNGKey(rnd * 7919 + 1)
+    for i, uid in enumerate(uids):
+        k = jax.random.fold_in(key, i)
+        noise = jax.tree.map(
+            lambda leaf: 0.01 * jax.random.normal(
+                jax.random.fold_in(k, hash(leaf.shape) % (1 << 30)),
+                leaf.shape),
+            validator.params)
+        payload = compress_fn(noise)
+        store.put_gradient(uid, rnd, payload,
+                           compress.payload_bytes(payload))
+        store.buckets[uid].put(f"sync/round-{rnd:08d}", sync,
+                               chain.block, 8)
+
+
+def bench(num_peers: int, rounds: int):
+    validator, chain, store, uids, compress_fn = build(num_peers)
+    times, calls = [], []
+    for rnd in range(rounds):
+        publish_round(validator, chain, store, uids, compress_fn, rnd)
+        chain.advance(chain.blocks_per_round)
+        before = validator.compiled_calls
+        t0 = time.perf_counter()
+        rep = validator.run_round(rnd, uids, fast_set_size=num_peers)
+        jax.block_until_ready(jax.tree.leaves(validator.params)[0])
+        times.append((time.perf_counter() - t0) * 1e3)
+        calls.append(validator.compiled_calls - before)
+        assert len(rep.evaluated) == num_peers
+    steady = sorted(times[1:]) or times
+    return {"peers": num_peers, "rounds": rounds,
+            "compile_round_ms": times[0],
+            "steady_round_ms": steady[len(steady) // 2],
+            "compiled_calls_per_round": calls[-1],
+            "ms_per_peer": steady[len(steady) // 2] / num_peers}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--peers", type=int, nargs="*",
+                    default=[8, 16, 32, 64])
+    args = ap.parse_args()
+    rows = [bench(n, args.rounds) for n in args.peers]
+    common.emit("gauntlet_bench", rows,
+                ["peers", "compile_round_ms", "steady_round_ms",
+                 "ms_per_peer", "compiled_calls_per_round"])
+    flat = {r["peers"]: r for r in rows}
+    lo, hi = min(flat), max(flat)
+    shrink = (flat[lo]["steady_round_ms"] / lo) / (
+        flat[hi]["steady_round_ms"] / hi)
+    print(f"\nper-peer cost {lo}→{hi} peers shrinks {shrink:.2f}x; "
+          f"compiled calls/round: "
+          f"{sorted(set(r['compiled_calls_per_round'] for r in rows))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ validators by stake weight (Yuma-consensus-lite: stake-weighted median).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -51,6 +52,21 @@ class Chain:
 
     def round_of(self, block: Optional[int] = None) -> int:
         return (block if block is not None else self._block) // self.blocks_per_round
+
+    @contextlib.contextmanager
+    def at_block(self, block: int):
+        """Temporarily pin the clock to ``block`` (restored on exit).
+
+        Simulation hook: lets a scenario stamp a bucket put at an arbitrary
+        block height (e.g. a peer missing the put window) without poking
+        the private counter.
+        """
+        saved = self._block
+        self._block = block
+        try:
+            yield self
+        finally:
+            self._block = saved
 
     # ---- registration (permissionless: anyone may register) --------
     def register_peer(self, uid: str, bucket_read_key: str) -> PeerRecord:

@@ -1,15 +1,51 @@
-"""The Gauntlet validator (paper §3, Algorithm 1).
+"""The Gauntlet validator (paper §3, Algorithm 1) as composable round stages.
 
-Two-stage evaluation per communication round:
-  fast eval  (large set F_t): put-window, format, sync-score checks → φ
-  primary eval (small set S_t): LossScore on assigned + random data,
-      OpenSkill LossRating match, proof-of-computation μ update.
-Then PEERSCORE = μ·LossRating, eq.-5 normalization posted on chain, top-G
-aggregation weights, and the coordinated DeMo update of the global model.
+Round architecture
+------------------
+A communication round is a pipeline of four stages that communicate only
+through an explicit :class:`RoundContext` blackboard:
+
+``fast-filter``
+    Large set F_t (top-G always included, §3.3): put-window, format and
+    sync-score checks; applies the φ penalty on failure and caches every
+    fetched payload on the context so later stages never re-fetch.
+
+``primary-eval``
+    Small set S_t: **batched** LossScore (eq. 2). The eval set's payloads
+    are stacked once along a leading peer axis
+    (:func:`repro.demo.compress.stack_payloads`), the signed per-peer
+    deltas and the stepped-parameter losses are ``vmap``-ed over that axis,
+    and the baseline losses L(θ, D) are computed once per *unique* batch
+    then gathered back per peer — a single compiled call per round instead
+    of the 4·|S_t| dispatches of the per-peer loop.
+
+``scoreboard``
+    Proof-of-computation μ update (batched eq. 3), OpenSkill LossRating
+    match, PEERSCORE (eq. 4), eq.-5 normalization, the on-chain weight
+    post, and the top-G weights (eq. 6).
+
+``aggregate``
+    Coordinated DeMo update of the global model. Contributors already
+    present in the stacked eval-set payloads are reused by gathering their
+    rows *inside* the jitted aggregator
+    (:func:`repro.demo.optimizer.aggregate_apply`) — no re-fetch and no
+    re-stack; the parameter update is fused into the same compiled call.
+
+:meth:`Validator.run_round` composes ``self.stages`` in order; callers may
+reorder, drop or substitute stages (benchmarks time individual stages,
+tests drive them one at a time). ``Validator.compiled_calls`` counts
+invocations of the batched jit entry points — O(1) per round regardless of
+|S_t|, which ``benchmarks/gauntlet_bench.py`` measures at 8→64 peers.
+
+The jitted entry points retrace when the eval-set / contributor-set sizes
+change; those sizes are bounded by ``eval_set_size`` / ``top_g`` and
+stabilize after the first rounds.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -46,6 +82,90 @@ class RoundReport:
     train_loss: Optional[float] = None
 
 
+@dataclasses.dataclass
+class RoundContext:
+    """Mutable blackboard threaded through the round stages.
+
+    Each stage reads what earlier stages produced and writes its own
+    outputs; nothing else is shared between stages, so any stage can be
+    run (or replaced) in isolation given a suitably-populated context.
+    """
+    round_idx: int
+    active_peers: List[str]
+    fast_set_size: Optional[int] = None
+    # fast-filter →
+    fast_set: List[str] = dataclasses.field(default_factory=list)
+    fast_pass: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    payloads: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # primary-eval →
+    eval_set: List[str] = dataclasses.field(default_factory=list)
+    stacked_payloads: Any = None    # Payload tree, leading axis = eval order
+    stacked_index: Dict[str, int] = dataclasses.field(default_factory=dict)
+    loss_scores_assigned: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    loss_scores_rand: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    # scoreboard →
+    norm_scores: Dict[str, float] = dataclasses.field(default_factory=dict)
+    weights: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # aggregate →
+    contributors: List[str] = dataclasses.field(default_factory=list)
+    lr: float = 0.0
+    train_loss: Optional[float] = None
+
+    def report(self) -> RoundReport:
+        return RoundReport(round_idx=self.round_idx,
+                           evaluated=list(self.eval_set),
+                           fast_checked=list(self.fast_set),
+                           loss_scores_rand=dict(self.loss_scores_rand),
+                           loss_scores_assigned=dict(
+                               self.loss_scores_assigned),
+                           norm_scores=dict(self.norm_scores),
+                           weights=dict(self.weights), lr=self.lr,
+                           train_loss=self.train_loss)
+
+
+def eligible_contributors(weights: Dict[str, float], store: BucketStore,
+                          chain: Chain, round_idx: int) -> List[str]:
+    """§3.3: only positive-weight peers whose payload landed inside the put
+    window may be aggregated. Validator and every peer apply this same rule
+    (via this same function) — otherwise replicas drift from θ^validator."""
+    return [p for p, w in weights.items()
+            if w > 0 and store.within_put_window(p, round_idx,
+                                                 chain.blocks_per_round)]
+
+
+def _batch_key(batch) -> bytes:
+    """Content digest of a data batch — the baseline-loss cache key."""
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in jax.tree.leaves(batch):
+        h.update(np.asarray(leaf).tobytes())
+    return h.digest()
+
+
+def _stack_batches(batches: List[Any]):
+    """List of identically-shaped batch pytrees -> leading axis K."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+
+def _unique_batches(batches: List[Any]):
+    """Deduplicate a list of batches by content.
+
+    Returns (unique_batches, index) with ``index[i]`` the row of
+    ``batches[i]`` inside ``unique_batches`` — peers sharing an eval batch
+    share one baseline-loss evaluation.
+    """
+    slots: Dict[bytes, int] = {}
+    uniq, index = [], []
+    for b in batches:
+        k = _batch_key(b)
+        if k not in slots:
+            slots[k] = len(uniq)
+            uniq.append(b)
+        index.append(slots[k])
+    return uniq, np.asarray(index, np.int32)
+
+
 class Validator:
     """Holds the reference model θ and runs Algorithm 1 every round."""
 
@@ -68,15 +188,36 @@ class Validator:
         self.peer_state: Dict[str, PeerState] = {}
         self.step = 0
         self.current_top_g: List[str] = []
+        self.compiled_calls = 0        # batched jit-entry invocations
+        self._last_fast_check: Dict[str, int] = {}
         chain.register_validator(uid, stake)
-        self._agg = jax.jit(self._aggregate_impl)
-        self._signed_delta = jax.jit(
-            lambda pl: demo_opt.single_peer_delta(pl, self.metas))
+        # the composable round pipeline — callers may substitute stages
+        self.stages: List[Callable[[RoundContext], RoundContext]] = [
+            self.stage_fast_filter, self.stage_primary_eval,
+            self.stage_scoreboard, self.stage_aggregate]
+        self._primary = jax.jit(self._primary_impl)
+        self._agg = jax.jit(functools.partial(demo_opt.aggregate_apply,
+                                              metas=self.metas))
 
     # ------------------------------------------------------------ pieces
-    def _aggregate_impl(self, stacked_payloads):
-        return demo_opt.aggregate(stacked_payloads, self.metas,
-                                  normalize=True, apply_sign=True)
+    def _primary_impl(self, params, stacked, uniq_a, uniq_r,
+                      idx_a, idx_r, beta):
+        """One compiled call for the whole of S_t: vmapped signed deltas,
+        per-unique-batch baselines, vmapped stepped losses (eq. 2).
+
+        Only the *unique* batches are staged to the device; the per-peer
+        views are gathered from them via idx_a/idx_r inside the trace."""
+        deltas = jax.vmap(
+            lambda pl: demo_opt.single_peer_delta(pl, self.metas))(stacked)
+        batches_a = jax.tree.map(lambda u: u[idx_a], uniq_a)
+        batches_r = jax.tree.map(lambda u: u[idx_r], uniq_r)
+        base_a = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_a)
+        base_r = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_r)
+        s_a = S.batched_loss_scores(self.eval_loss, params, deltas,
+                                    batches_a, beta, baseline=base_a[idx_a])
+        s_r = S.batched_loss_scores(self.eval_loss, params, deltas,
+                                    batches_r, beta, baseline=base_r[idx_r])
+        return s_a, s_r
 
     def _state(self, peer: str) -> PeerState:
         if peer not in self.peer_state:
@@ -88,6 +229,18 @@ class Validator:
                                    base_lr=self.hp.learning_rate,
                                    warmup_steps=self.hp.warmup_steps,
                                    total_steps=self.hp.total_steps))
+
+    def _fetch_payload(self, ctx: RoundContext, peer: str):
+        """Read a peer's payload once per round; cache on the context."""
+        if peer in ctx.payloads:
+            return ctx.payloads[peer]
+        try:
+            rk = self.chain.peers[peer].bucket_read_key
+            payload, _ = self.store.get_gradient(peer, ctx.round_idx, rk)
+        except Exception:
+            return None
+        ctx.payloads[peer] = payload
+        return payload
 
     def _format_ok(self, payload) -> bool:
         """§3.2 check (c): tensor structure, shapes and dtypes."""
@@ -115,47 +268,55 @@ class Validator:
         except Exception:
             return False
 
-    def fast_evaluate(self, peer: str, round_idx: int) -> bool:
-        """Returns pass/fail; applies φ penalty on fail (paper §3.2)."""
-        st = self._state(peer)
-        ok = True
+    def _fast_check(self, ctx: RoundContext, peer: str,
+                    sync_ref: np.ndarray) -> bool:
+        """§3.2 checks (a)-(c) + sync score; pure predicate, no penalty."""
         # (a)+(b): payload present and inside the put window
         if not self.store.within_put_window(
-                peer, round_idx, self.chain.blocks_per_round):
-            ok = False
-        payload = None
-        if ok:
-            try:
-                rk = self.chain.peers[peer].bucket_read_key
-                payload, _ = self.store.get_gradient(peer, round_idx, rk)
-            except Exception:
-                ok = False
+                peer, ctx.round_idx, self.chain.blocks_per_round):
+            return False
+        payload = self._fetch_payload(ctx, peer)
         # (c): format
-        if ok and not self._format_ok(payload):
-            ok = False
+        if payload is None or not self._format_ok(payload):
+            return False
         # sync score from the peer's sampled params
-        if ok:
-            try:
-                rk = self.chain.peers[peer].bucket_read_key
-                sample, _ = self.store.buckets[peer].get(
-                    f"sync/round-{round_idx:08d}", rk)
-                mine = S.sample_params_for_sync(
-                    self.params, jax.random.PRNGKey(round_idx))
-                sc = S.sync_score(mine, sample, self.lr_at())
-                if sc > self.hp.sync_score_threshold:
-                    ok = False
-            except KeyError:
-                ok = False
+        try:
+            rk = self.chain.peers[peer].bucket_read_key
+            sample, _ = self.store.buckets[peer].get(
+                f"sync/round-{ctx.round_idx:08d}", rk)
+            sc = S.sync_score(sync_ref, sample, self.lr_at())
+        except Exception:
+            # missing OR malformed sync sample (wrong shape/dtype) is the
+            # peer's failure, never the round's — Byzantine peers must not
+            # be able to abort evaluation for everyone else
+            return False
+        return sc <= self.hp.sync_score_threshold
+
+    def fast_evaluate(self, peer: str, round_idx: int) -> bool:
+        """Single-peer fast eval (φ penalty on fail, §3.2). The round
+        pipeline batches this via :meth:`stage_fast_filter`."""
+        ctx = RoundContext(round_idx=round_idx, active_peers=[peer])
+        sync_ref = S.sample_params_for_sync(self.params,
+                                            jax.random.PRNGKey(round_idx))
+        ok = self._fast_check(ctx, peer, sync_ref)
+        self._last_fast_check[peer] = round_idx
+        st = self._state(peer)
         if not ok:
             st.mu *= self.hp.fast_eval_penalty
         st.last_fast_pass = ok
         return ok
 
     def primary_evaluate(self, peer: str, round_idx: int):
-        """LossScore on assigned + random data (Algorithm 1 inner loop)."""
+        """Scalar reference path for one peer (Algorithm 1 inner loop).
+
+        The round pipeline uses the batched :meth:`stage_primary_eval`;
+        this stays as the numerical oracle the batched path is regression
+        tested against. Side-effect free (μ updates live in the
+        scoreboard stage).
+        """
         rk = self.chain.peers[peer].bucket_read_key
         payload, _ = self.store.get_gradient(peer, round_idx, rk)
-        delta = self._signed_delta(payload)
+        delta = demo_opt.single_peer_delta(payload, self.metas)
         beta = self.hp.eval_beta_frac * self.lr_at()
         d_assigned = self.data["assigned"](peer, round_idx)
         d_rand = self.data["unassigned"](peer, round_idx)
@@ -163,67 +324,133 @@ class Validator:
                                   d_assigned, beta)
         s_rand = S.loss_score(self.eval_loss, self.params, delta,
                               d_rand, beta)
-        st = self._state(peer)
-        st.mu = S.poc_update(st.mu, s_assigned, s_rand, self.hp.poc_gamma)
-        st.evals += 1
         return s_assigned, s_rand
 
-    # ------------------------------------------------------------ round
-    def run_round(self, round_idx: int, active_peers: List[str],
-                  fast_set_size: Optional[int] = None) -> RoundReport:
+    # ------------------------------------------------------------ stages
+    def stage_fast_filter(self, ctx: RoundContext) -> RoundContext:
+        """Fast evaluation over F_t: top-G always included (§3.3), the
+        rest filled least-recently-checked-first (random among equals) so
+        every active peer keeps getting coverage."""
         hp = self.hp
-        # --- fast evaluation set: top-G always included (paper §3.3)
-        fast_n = fast_set_size or max(len(active_peers) // 2, hp.top_g)
-        pool = [p for p in active_peers if p not in self.current_top_g]
+        fast_n = ctx.fast_set_size or max(len(ctx.active_peers) // 2,
+                                          hp.top_g + 1)
+        pool = [p for p in ctx.active_peers if p not in self.current_top_g]
         self.rng.shuffle(pool)
+        pool.sort(key=lambda p: self._last_fast_check.get(p, -1))
         fast_set = (self.current_top_g
                     + pool[:max(0, fast_n - len(self.current_top_g))])
+        sync_ref = S.sample_params_for_sync(
+            self.params, jax.random.PRNGKey(ctx.round_idx))
         for peer in fast_set:
-            self.fast_evaluate(peer, round_idx)
+            ok = self._fast_check(ctx, peer, sync_ref)
+            ctx.fast_pass[peer] = ok
+            self._last_fast_check[peer] = ctx.round_idx
+            st = self._state(peer)
+            if not ok:
+                st.mu *= hp.fast_eval_penalty
+            st.last_fast_pass = ok
+        ctx.fast_set = fast_set
+        return ctx
 
-        # --- primary evaluation set S_t
-        candidates = [p for p in active_peers
+    def stage_primary_eval(self, ctx: RoundContext) -> RoundContext:
+        """Batched LossScore over S_t — one compiled call per round."""
+        hp = self.hp
+        candidates = [p for p in ctx.active_peers
                       if self.store.within_put_window(
-                          p, round_idx, self.chain.blocks_per_round)]
+                          p, ctx.round_idx, self.chain.blocks_per_round)]
         self.rng.shuffle(candidates)
-        eval_set = candidates[:hp.eval_set_size]
-        ls_rand, ls_assigned = {}, {}
-        for peer in eval_set:
-            sa, sr = self.primary_evaluate(peer, round_idx)
-            ls_assigned[peer], ls_rand[peer] = sa, sr
-        # OpenSkill match over the random-subset scores
-        if len(ls_rand) >= 2:
-            self.book.match(ls_rand)
+        eval_set = [p for p in candidates[:hp.eval_set_size]
+                    if self._fetch_payload(ctx, p) is not None]
+        ctx.eval_set = eval_set
+        if not eval_set:
+            return ctx
+        stacked = compress.stack_payloads(
+            [ctx.payloads[p] for p in eval_set])
+        ctx.stacked_payloads = stacked
+        ctx.stacked_index = {p: i for i, p in enumerate(eval_set)}
+        beta = hp.eval_beta_frac * self.lr_at()
+        batches_a = [self.data["assigned"](p, ctx.round_idx)
+                     for p in eval_set]
+        batches_r = [self.data["unassigned"](p, ctx.round_idx)
+                     for p in eval_set]
+        uniq_a, idx_a = _unique_batches(batches_a)
+        uniq_r, idx_r = _unique_batches(batches_r)
+        s_a, s_r = self._primary(
+            self.params, stacked, _stack_batches(uniq_a),
+            _stack_batches(uniq_r), jnp.asarray(idx_a), jnp.asarray(idx_r),
+            jnp.float32(beta))
+        self.compiled_calls += 1
+        s_a, s_r = np.asarray(s_a), np.asarray(s_r)
+        for i, p in enumerate(eval_set):
+            ctx.loss_scores_assigned[p] = float(s_a[i])
+            ctx.loss_scores_rand[p] = float(s_r[i])
+            self._state(p).evals += 1
+        return ctx
 
-        # --- PEERSCORE + normalization + chain post
+    def stage_scoreboard(self, ctx: RoundContext) -> RoundContext:
+        """PoC μ (batched eq. 3) + OpenSkill + PEERSCORE + eq.-5 post."""
+        hp = self.hp
+        if ctx.eval_set:
+            mu = np.array([self._state(p).mu for p in ctx.eval_set])
+            s_a = np.array([ctx.loss_scores_assigned[p]
+                            for p in ctx.eval_set])
+            s_r = np.array([ctx.loss_scores_rand[p] for p in ctx.eval_set])
+            new_mu = S.poc_update_batched(mu, s_a, s_r, hp.poc_gamma)
+            for p, m in zip(ctx.eval_set, new_mu):
+                self._state(p).mu = float(m)
+        # OpenSkill match over the random-subset scores
+        if len(ctx.loss_scores_rand) >= 2:
+            self.book.match(ctx.loss_scores_rand)
         raw = {p: S.peer_score(
                    self._state(p).mu if hp.use_poc else 1.0,
                    self.book.ordinal(p))
-               for p in active_peers}
-        norm = S.normalize_scores(raw, hp.norm_power)
-        self.chain.post_weights(self.uid, norm)
+               for p in ctx.active_peers}
+        ctx.norm_scores = S.normalize_scores(raw, hp.norm_power)
+        self.chain.post_weights(self.uid, ctx.norm_scores)
+        ctx.weights = S.top_g_weights(ctx.norm_scores, hp.top_g)
+        return ctx
 
-        # --- aggregation: top-G equal weights (eq. 6)
-        weights = S.top_g_weights(norm, hp.top_g)
-        contributors = [p for p, w in weights.items() if w > 0
-                        and self.store.within_put_window(
-                            p, round_idx, self.chain.blocks_per_round)]
+    def stage_aggregate(self, ctx: RoundContext) -> RoundContext:
+        """Top-G coordinated DeMo update (eq. 6) in one fused compiled
+        call, reusing stacked eval payloads where possible."""
+        ctx.lr = self.lr_at()
+        contributors = eligible_contributors(ctx.weights, self.store,
+                                             self.chain, ctx.round_idx)
         self.current_top_g = contributors
-        lr = self.lr_at()
-        if contributors:
-            payloads = []
-            for p in contributors:
-                rk = self.chain.peers[p].bucket_read_key
-                pl_, _ = self.store.get_gradient(p, round_idx, rk)
-                payloads.append(pl_)
-            stacked = jax.tree.map(
-                lambda *ps: Payload(vals=jnp.stack([q.vals for q in ps]),
-                                    idx=jnp.stack([q.idx for q in ps])),
-                *payloads, is_leaf=lambda x: isinstance(x, Payload))
-            delta = self._agg(stacked)
-            self.params = demo_opt.apply_update(self.params, delta, lr)
-            self.step += 1
-        return RoundReport(round_idx=round_idx, evaluated=eval_set,
-                           fast_checked=fast_set, loss_scores_rand=ls_rand,
-                           loss_scores_assigned=ls_assigned,
-                           norm_scores=norm, weights=weights, lr=lr)
+        ctx.contributors = contributors
+        if not contributors:
+            return ctx
+        rows = [ctx.stacked_index.get(p) for p in contributors]
+        if ctx.stacked_payloads is not None and None not in rows:
+            stacked = ctx.stacked_payloads
+        else:
+            payloads = [pl for pl in (self._fetch_payload(ctx, p)
+                                      for p in contributors)
+                        if pl is not None]
+            if not payloads:
+                return ctx
+            stacked = compress.stack_payloads(payloads)
+            rows = list(range(len(payloads)))
+        self.params = self._agg(self.params, stacked,
+                                jnp.asarray(rows, jnp.int32),
+                                jnp.float32(ctx.lr))
+        self.compiled_calls += 1
+        self.step += 1
+        return ctx
+
+    # ------------------------------------------------------------ round
+    def build_context(self, round_idx: int, active_peers: List[str],
+                      fast_set_size: Optional[int] = None) -> RoundContext:
+        return RoundContext(round_idx=round_idx,
+                            active_peers=list(active_peers),
+                            fast_set_size=fast_set_size)
+
+    def run_stages(self, ctx: RoundContext) -> RoundContext:
+        for stage in self.stages:
+            ctx = stage(ctx)
+        return ctx
+
+    def run_round(self, round_idx: int, active_peers: List[str],
+                  fast_set_size: Optional[int] = None) -> RoundReport:
+        ctx = self.build_context(round_idx, active_peers, fast_set_size)
+        return self.run_stages(ctx).report()

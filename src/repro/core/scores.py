@@ -1,4 +1,11 @@
-"""Gauntlet scoring primitives (paper §3, eqs. 2-6)."""
+"""Gauntlet scoring primitives (paper §3, eqs. 2-6).
+
+Every primitive that sits on the validator's hot path has a *batched*
+variant operating over a leading peer axis (consumed by the vectorized
+round stages in ``repro.core.gauntlet``); the scalar host-side APIs are
+kept as thin wrappers so single-peer callers and the numerical-parity
+tests keep working unchanged.
+"""
 from __future__ import annotations
 
 from typing import Dict, Sequence
@@ -8,26 +15,62 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def loss_score(eval_loss_fn, params, delta, data_batch, beta: float):
-    """Eq. 2: LossScore = L(θ, D) − L(θ − β·Δ, D).
+def _xp(*vals):
+    """numpy for host values, jnp for jax arrays / tracers."""
+    return jnp if any(isinstance(v, jax.Array) for v in vals) else np
 
-    ``delta`` is the *signed* single-peer update (Algo 1: Sign(Δ_p)),
-    ``beta`` the damped step (β_t = c·α_t with c < 1).
-    """
-    before = eval_loss_fn(params, data_batch)
-    stepped = jax.tree.map(
+
+def stepped_params(params, delta, beta):
+    """Algo 1: θ' = θ − β·Δ, computed in fp32 and cast back."""
+    return jax.tree.map(
         lambda p, d: (p.astype(jnp.float32)
                       - beta * d.astype(jnp.float32)).astype(p.dtype),
         params, delta)
-    after = eval_loss_fn(stepped, data_batch)
+
+
+def loss_score(eval_loss_fn, params, delta, data_batch, beta: float):
+    """Eq. 2 (scalar reference): LossScore = L(θ, D) − L(θ − β·Δ, D).
+
+    ``delta`` is the *signed* single-peer update (Algo 1: Sign(Δ_p)),
+    ``beta`` the damped step (β_t = c·α_t with c < 1). This is the oracle
+    the batched path is regression-tested against.
+    """
+    before = eval_loss_fn(params, data_batch)
+    after = eval_loss_fn(stepped_params(params, delta, beta), data_batch)
     return float(before) - float(after)
+
+
+def batched_loss_scores(eval_loss_fn, params, deltas, batches, beta,
+                        baseline=None):
+    """Eq. 2 vmapped over a leading peer axis K.
+
+    ``deltas``: params-like pytree with (K, ...) leaves; ``batches``: batch
+    pytree with (K, ...) leaves. ``baseline`` optionally supplies per-peer
+    L(θ, D) values (K,) already computed — the validator deduplicates
+    baselines per *unique* batch and gathers them back, so peers sharing a
+    batch never recompute it. Returns (K,) fp32 LossScores.
+    """
+    if baseline is None:
+        baseline = jax.vmap(lambda b: eval_loss_fn(params, b))(batches)
+    after = jax.vmap(
+        lambda d, b: eval_loss_fn(stepped_params(params, d, beta), b)
+    )(deltas, batches)
+    return (jnp.asarray(baseline, jnp.float32)
+            - jnp.asarray(after, jnp.float32))
+
+
+def poc_update_batched(mu, score_assigned, score_rand, gamma: float):
+    """Eq. 3 elementwise over peer vectors (numpy or jax arrays)."""
+    xp = _xp(mu, score_assigned, score_rand)
+    return gamma * mu + (1.0 - gamma) * xp.sign(score_assigned - score_rand)
 
 
 def poc_update(mu_p: float, score_assigned: float, score_rand: float,
                gamma: float) -> float:
     """Eq. 3: proof-of-computation EMA of sign(assigned − random)."""
-    return gamma * mu_p + (1.0 - gamma) * float(
-        np.sign(score_assigned - score_rand))
+    return float(poc_update_batched(np.float64(mu_p),
+                                    np.float64(score_assigned),
+                                    np.float64(score_rand), gamma))
 
 
 def sync_score(theta_validator: np.ndarray, theta_peer: np.ndarray,
@@ -61,18 +104,29 @@ def peer_score(mu_p: float, loss_rating: float) -> float:
     return mu_p * loss_rating
 
 
+def normalize_scores_batched(vals, power: float = 2.0):
+    """Eq. 5 over a score vector (numpy or jax array) — sums to 1.
+
+    All-equal inputs degrade to the uniform distribution, matching the
+    dict API; a zero-length vector comes back unchanged.
+    """
+    xp = _xp(vals)
+    if vals.shape[0] == 0:
+        return vals
+    shifted = xp.maximum(vals - vals.min(), 0.0) ** power
+    total = shifted.sum()
+    safe = xp.where(total > 0, total, 1.0)
+    uniform = xp.full(shifted.shape, 1.0 / shifted.shape[0])
+    return xp.where(total > 0, shifted / safe, uniform)
+
+
 def normalize_scores(scores: Dict[str, float], power: float = 2.0
                      ) -> Dict[str, float]:
     """Eq. 5: xᵖ = (s_p − min s)^c / Σ_k (s_k − min s)^c ; sums to 1."""
     if not scores:
         return {}
     vals = np.array(list(scores.values()), np.float64)
-    shifted = np.maximum(vals - vals.min(), 0.0) ** power
-    total = shifted.sum()
-    if total <= 0:
-        norm = np.full_like(shifted, 1.0 / len(shifted))
-    else:
-        norm = shifted / total
+    norm = normalize_scores_batched(vals, power)
     return {p: float(v) for p, v in zip(scores, norm)}
 
 

@@ -8,7 +8,7 @@ jit/pjit/shard_map and ``jax.lax.all_gather`` unchanged.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,32 @@ def topk_decompress(p: Payload, chunk_elems: int) -> jnp.ndarray:
 
 
 # ------------------------------------------------------------- tree utils
+
+
+def stack_payloads(payload_trees: Sequence[Any]):
+    """List of per-peer payload pytrees -> one pytree whose Payload leaves
+    carry a leading peer axis K.
+
+    This is THE stacking idiom for the host-level paths (the validator's
+    batched round stages, peer-side coordinated aggregation) — the same
+    layout ``jax.lax.all_gather`` produces on the mesh path, so everything
+    downstream of it is shared.
+    """
+    return jax.tree.map(
+        lambda *ps: Payload(vals=jnp.stack([p.vals for p in ps]),
+                            idx=jnp.stack([p.idx for p in ps])),
+        *payload_trees, is_leaf=lambda x: isinstance(x, Payload))
+
+
+def take_payloads(stacked, rows):
+    """Select ``rows`` along the leading peer axis of a stacked payload
+    tree (traceable — the validator reuses its already-stacked eval-set
+    payloads for top-G aggregation by gathering rows inside jit)."""
+    rows = jnp.asarray(rows, jnp.int32)
+    return jax.tree.map(
+        lambda p: Payload(vals=jnp.take(p.vals, rows, axis=0),
+                          idx=jnp.take(p.idx, rows, axis=0)),
+        stacked, is_leaf=lambda x: isinstance(x, Payload))
 
 
 def tree_meta(params, s: int) -> Dict[str, Any]:

@@ -71,10 +71,7 @@ def aggregate(payloads, metas, weights: Optional[jnp.ndarray] = None,
     Returns a dense pytree Δ shaped like params.
     """
     if isinstance(payloads, (list, tuple)):
-        stacked = jax.tree.map(lambda *ps: Payload(
-            vals=jnp.stack([p.vals for p in ps]),
-            idx=jnp.stack([p.idx for p in ps])), *payloads,
-            is_leaf=_is_payload)
+        stacked = compress.stack_payloads(payloads)
     else:
         stacked = payloads
     K = jax.tree.leaves(stacked, is_leaf=_is_payload)[0].vals.shape[0]
@@ -114,6 +111,21 @@ def apply_update(params, delta, lr, weight_decay: float = 0.0):
             p32 = p32 * (1.0 - lr * weight_decay)
         return (p32 - lr * d.astype(jnp.float32)).astype(p.dtype)
     return jax.tree.map(upd, params, delta)
+
+
+def aggregate_apply(params, stacked, rows, lr, metas, *,
+                    normalize: bool = True, apply_sign: bool = True):
+    """One fused coordinated-update step: gather ``rows`` (peer indices)
+    from the stacked payloads, aggregate (Algo 2) and apply θ ← θ − α·Δ.
+
+    Validator and peers both jit this exact function (with metas bound),
+    so every replica runs the same compiled program and stays bit-identical.
+    ``rows`` lets the validator reuse its already-stacked eval-set payloads
+    for top-G aggregation without re-fetching or re-stacking.
+    """
+    sub = compress.take_payloads(stacked, rows)
+    delta = aggregate(sub, metas, normalize=normalize, apply_sign=apply_sign)
+    return apply_update(params, delta, lr)
 
 
 def single_peer_delta(payload_tree, metas, apply_sign: bool = True):

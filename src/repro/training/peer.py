@@ -16,6 +16,7 @@ Behaviours model the paper's simulations (§6 Fig. 2) and threat model (§4):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, Optional
 
 import jax
@@ -26,8 +27,8 @@ from repro.comms.bucket import BucketStore
 from repro.comms.chain import Chain
 from repro.configs.base import TrainConfig
 from repro.core import byzantine, scores as S
+from repro.core.gauntlet import eligible_contributors
 from repro.demo import compress, optimizer as demo_opt
-from repro.demo.compress import Payload
 
 
 @dataclasses.dataclass
@@ -59,6 +60,10 @@ class PeerNode:
         read_key = store.create_bucket(pc.uid)
         chain.register_peer(pc.uid, read_key)
         self._local = jax.jit(self._local_impl)
+        # same fused aggregate+apply the validator jits — every replica
+        # runs the same compiled program and stays bit-identical to θ^val
+        self._agg = jax.jit(functools.partial(demo_opt.aggregate_apply,
+                                              metas=self.metas))
 
     def _local_impl(self, params, state, batches):
         """Accumulate grads over the round's micro-batches (more data =>
@@ -110,11 +115,9 @@ class PeerNode:
         size = compress.payload_bytes(payload)
         if b == "late":
             # simulate missing the window: stamp after window close
-            saved = self.chain._block
-            self.chain._block = ((round_idx + 1)
-                                 * self.chain.blocks_per_round + 1)
-            self.store.put_gradient(self.uid, round_idx, payload, size)
-            self.chain._block = saved
+            late_block = (round_idx + 1) * self.chain.blocks_per_round + 1
+            with self.chain.at_block(late_block):
+                self.store.put_gradient(self.uid, round_idx, payload, size)
         else:
             self.store.put_gradient(self.uid, round_idx, payload, size)
         # sync sample (2 values/tensor, §3.2)
@@ -135,9 +138,8 @@ class PeerNode:
         outside the window — otherwise they drift from θ^validator."""
         if self._paused(round_idx):
             return
-        contributors = [p for p, w in weights.items() if w > 0
-                        and self.store.within_put_window(
-                            p, round_idx, self.chain.blocks_per_round)]
+        contributors = eligible_contributors(weights, self.store,
+                                             self.chain, round_idx)
         payloads = []
         for p in contributors:
             try:
@@ -148,12 +150,7 @@ class PeerNode:
                 continue
         if not payloads:
             return
-        stacked = jax.tree.map(
-            lambda *ps: Payload(vals=jnp.stack([q.vals for q in ps]),
-                                idx=jnp.stack([q.idx for q in ps])),
-            *payloads, is_leaf=lambda x: isinstance(x, Payload))
-        if not hasattr(self, "_agg"):
-            self._agg = jax.jit(lambda st: demo_opt.aggregate(
-                st, self.metas, normalize=True, apply_sign=True))
-        delta = self._agg(stacked)
-        self.params = demo_opt.apply_update(self.params, delta, lr)
+        stacked = compress.stack_payloads(payloads)
+        rows = jnp.arange(len(payloads), dtype=jnp.int32)
+        self.params = self._agg(self.params, stacked, rows,
+                                jnp.float32(lr))

@@ -1,6 +1,11 @@
 """End-to-end Gauntlet simulation driver: chain + buckets + peers +
 validator, one communication round at a time (the paper's full system at
-laptop scale; benchmarks and integration tests run through this)."""
+laptop scale; benchmarks and integration tests run through this).
+
+Each round drives the validator's composable stage pipeline explicitly
+(``build_context`` → ``run_stages`` → ``report``) so callers can observe
+or splice the per-stage state; ``Validator.run_round`` is the same thing
+in one call."""
 from __future__ import annotations
 
 import dataclasses
@@ -81,9 +86,10 @@ def run_rounds(validator: Validator, peers: Dict[str, PeerNode],
         for peer in peers.values():
             peer.produce(rnd)
         chain.advance(chain.blocks_per_round)  # window closes
-        # --- validator evaluates + aggregates
-        rep = validator.run_round(rnd, list(peers.keys()),
-                                  fast_set_size=fast_set_size)
+        # --- validator evaluates + aggregates (stage pipeline)
+        ctx = validator.build_context(rnd, list(peers.keys()),
+                                      fast_set_size=fast_set_size)
+        rep = validator.run_stages(ctx).report()
         # --- coordinated aggregation on every peer
         for peer in peers.values():
             peer.apply_round(rnd, rep.weights, rep.lr)

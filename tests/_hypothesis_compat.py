@@ -1,0 +1,45 @@
+"""Optional-``hypothesis`` shim.
+
+Property-based tests use hypothesis when it is installed (see
+``requirements-dev.txt``). When it is missing, this module supplies
+stand-ins so the modules still *collect* cleanly: ``@given`` replaces the
+test body with a skip (reported as such, not silently passed), while the
+plain example-based tests in the same module keep running.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert strategy placeholder: any attribute access or call
+        (st.integers(...), .map(str), .filter(f), ...) returns another
+        placeholder, so module-level strategy expressions evaluate."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # no functools.wraps: the replacement must expose a ZERO-arg
+            # signature or pytest would treat hypothesis-injected params
+            # as fixtures and error instead of skipping
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

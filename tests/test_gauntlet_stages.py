@@ -1,0 +1,162 @@
+"""Batched round stages: numerical parity with the scalar reference path,
+stage composition through RoundContext, O(1) compiled-call dispatch, and
+reuse of the stacked eval payloads for aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import tiny_config
+from repro.training.peer import PeerConfig
+from repro.training.round_loop import build_sim
+
+HP = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=100,
+                 top_g=3, eval_set_size=8, demo_chunk=16, demo_topk=8,
+                 poc_gamma=0.6)
+
+
+def _sim(n_peers: int, hp: TrainConfig = HP):
+    cfg = tiny_config()
+    pcs = [PeerConfig(uid=f"h{i}") for i in range(n_peers)]
+    return build_sim(cfg, hp, pcs, batch=4, seq_len=32)
+
+
+def _publish(validator, peers, chain, rnd: int):
+    for peer in peers.values():
+        peer.produce(rnd)
+    chain.advance(chain.blocks_per_round)
+
+
+@pytest.fixture(scope="module")
+def one_round():
+    validator, peers, chain, store, corpus = _sim(5)
+    _publish(validator, peers, chain, 0)
+    ctx = validator.build_context(0, list(peers.keys()))
+    validator.stage_fast_filter(ctx)
+    validator.stage_primary_eval(ctx)
+    return validator, peers, ctx
+
+
+def test_batched_loss_scores_match_scalar_path(one_round):
+    """Acceptance: batched primary eval == per-peer scalar eq. 2, fp32."""
+    validator, peers, ctx = one_round
+    assert len(ctx.eval_set) == 5
+    for p in ctx.eval_set:
+        s_assigned, s_rand = validator.primary_evaluate(p, 0)
+        np.testing.assert_allclose(ctx.loss_scores_assigned[p], s_assigned,
+                                   rtol=1e-4, atol=5e-4, err_msg=p)
+        np.testing.assert_allclose(ctx.loss_scores_rand[p], s_rand,
+                                   rtol=1e-4, atol=5e-4, err_msg=p)
+
+
+def test_stacked_payloads_cover_eval_set(one_round):
+    _, _, ctx = one_round
+    assert sorted(ctx.stacked_index) == sorted(ctx.eval_set)
+    leaf = jax.tree.leaves(
+        ctx.stacked_payloads,
+        is_leaf=lambda x: hasattr(x, "vals") and hasattr(x, "idx"))[0]
+    assert leaf.vals.shape[0] == len(ctx.eval_set)
+
+
+def test_payloads_fetched_once_per_round(one_round):
+    """fast-filter caches payloads on the context; primary-eval and
+    aggregate reuse them instead of re-reading the bucket."""
+    _, _, ctx = one_round
+    for p in ctx.eval_set:
+        assert p in ctx.payloads
+
+
+def test_compiled_calls_constant_in_peer_count():
+    """Acceptance: O(1) compiled calls per round regardless of |S_t|."""
+    counts = {}
+    for n in (3, 6):
+        hp = TrainConfig(**{**HP.__dict__, "eval_set_size": n})
+        validator, peers, chain, store, corpus = _sim(n, hp)
+        _publish(validator, peers, chain, 0)
+        validator.compiled_calls = 0
+        rep = validator.run_round(0, list(peers.keys()))
+        assert len(rep.evaluated) == n
+        counts[n] = validator.compiled_calls
+    assert counts[3] == counts[6] == 2   # primary-eval + aggregate
+
+
+def test_aggregate_reuses_stacked_rows():
+    """When every contributor was primary-evaluated, aggregation gathers
+    rows from the stacked eval payloads (no re-fetch, no re-stack)."""
+    validator, peers, chain, store, corpus = _sim(4)
+    _publish(validator, peers, chain, 0)
+    ctx = validator.build_context(0, list(peers.keys()))
+    validator.run_stages(ctx)
+    assert ctx.contributors
+    assert all(p in ctx.stacked_index for p in ctx.contributors)
+    assert validator.step == 1
+
+
+def test_stage_pipeline_is_swappable():
+    """run_round composes self.stages; a spliced-in stage sees the ctx."""
+    validator, peers, chain, store, corpus = _sim(3)
+    _publish(validator, peers, chain, 0)
+    seen = {}
+
+    def probe(ctx):
+        seen["eval_set"] = list(ctx.eval_set)
+        return ctx
+
+    validator.stages = [validator.stage_fast_filter,
+                        validator.stage_primary_eval, probe,
+                        validator.stage_scoreboard,
+                        validator.stage_aggregate]
+    rep = validator.run_round(0, list(peers.keys()))
+    assert seen["eval_set"] == rep.evaluated
+
+
+def test_report_matches_context_fields():
+    validator, peers, chain, store, corpus = _sim(3)
+    _publish(validator, peers, chain, 0)
+    ctx = validator.build_context(0, list(peers.keys()))
+    rep = validator.run_stages(ctx).report()
+    assert rep.evaluated == ctx.eval_set
+    assert rep.weights == ctx.weights
+    assert abs(sum(rep.norm_scores.values()) - 1.0) < 1e-6
+    assert rep.lr == ctx.lr
+
+
+def test_empty_round_is_safe():
+    """No peer published: every stage degrades gracefully."""
+    validator, peers, chain, store, corpus = _sim(3)
+    chain.advance(chain.blocks_per_round)   # window closes, nothing put
+    rep = validator.run_round(0, list(peers.keys()))
+    assert rep.evaluated == []
+    assert validator.step == 0
+    assert abs(sum(rep.norm_scores.values()) - 1.0) < 1e-6
+
+
+def test_malformed_sync_sample_fails_peer_not_round():
+    """A Byzantine peer publishing a garbage sync sample must fail its own
+    fast check, not abort the validator's round."""
+    validator, peers, chain, store, corpus = _sim(3)
+    _publish(validator, peers, chain, 0)
+    uid = list(peers)[0]
+    key = "sync/round-00000000"
+    store.buckets[uid]._objects.pop(key)
+    store.buckets[uid].put(key, np.zeros(3), chain.block, 8)   # wrong shape
+    rep = validator.run_round(0, list(peers.keys()),
+                              fast_set_size=len(peers))
+    assert validator.peer_state[uid].last_fast_pass is False
+    assert len(rep.fast_checked) == len(peers)
+
+
+def test_shared_baseline_is_cached_across_peers():
+    """Two peers evaluated on an identical batch must trigger exactly one
+    baseline loss evaluation (the dedup path)."""
+    from repro.core import gauntlet as G
+    b = {"tokens": jnp.ones((2, 8), jnp.int32),
+         "labels": jnp.ones((2, 8), jnp.int32)}
+    b2 = {"tokens": jnp.ones((2, 8), jnp.int32),
+          "labels": jnp.ones((2, 8), jnp.int32)}
+    other = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    uniq, idx = G._unique_batches([b, b2, other])
+    assert len(uniq) == 2
+    np.testing.assert_array_equal(idx, [0, 0, 1])

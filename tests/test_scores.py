@@ -1,4 +1,5 @@
 """Gauntlet scoring primitives (eqs. 2-6)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -69,3 +70,94 @@ def test_sample_params_for_sync_deterministic():
     s2 = S.sample_params_for_sync(params, jax.random.PRNGKey(7))
     np.testing.assert_array_equal(s1, s2)
     assert s1.size == 4   # 2 per tensor
+
+
+# ------------------------------------------------------------- edge cases
+
+
+def test_normalize_scores_single_peer():
+    assert S.normalize_scores({"only": 42.0}) == {"only": 1.0}
+
+
+def test_normalize_scores_ties_split_evenly():
+    norm = S.normalize_scores({"a": 2.0, "b": 2.0, "c": 0.0}, power=2.0)
+    assert abs(sum(norm.values()) - 1.0) < 1e-9
+    assert abs(norm["a"] - norm["b"]) < 1e-12
+    assert norm["c"] == 0.0
+
+
+def test_normalize_scores_all_equal_uniform():
+    norm = S.normalize_scores({p: -3.5 for p in "abcd"})
+    assert all(abs(v - 0.25) < 1e-12 for v in norm.values())
+
+
+def test_normalize_scores_empty():
+    assert S.normalize_scores({}) == {}
+
+
+def test_normalize_scores_batched_empty_vector():
+    out = S.normalize_scores_batched(np.array([]))
+    assert out.shape == (0,)
+
+
+def test_top_g_weights_g_exceeds_peer_count():
+    w = S.top_g_weights({"a": 0.9, "b": 0.1}, g=50)
+    assert w == {"a": 0.5, "b": 0.5}
+
+
+def test_sync_score_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        S.sync_score(np.zeros(4), np.zeros(5), alpha=0.1)
+    with pytest.raises(AssertionError):
+        S.sync_score(np.zeros(0), np.zeros(0), alpha=0.1)
+
+
+# ------------------------------------------------- batched == scalar
+
+
+def test_poc_update_batched_matches_scalar():
+    rng = np.random.RandomState(0)
+    mu = rng.randn(16)
+    sa, sr = rng.randn(16), rng.randn(16)
+    batched = S.poc_update_batched(mu, sa, sr, gamma=0.7)
+    scalar = [S.poc_update(m, a, r, 0.7) for m, a, r in zip(mu, sa, sr)]
+    np.testing.assert_allclose(batched, scalar, rtol=0, atol=1e-12)
+
+
+def test_normalize_scores_batched_jnp_matches_dict():
+    vals = np.array([3.0, 1.0, 0.0, 1.0])
+    via_dict = S.normalize_scores(dict(zip("abcd", vals)), power=2.0)
+    via_jnp = np.asarray(
+        S.normalize_scores_batched(jnp.asarray(vals), power=2.0))
+    np.testing.assert_allclose(list(via_dict.values()), via_jnp, atol=1e-6)
+
+
+def test_batched_loss_scores_match_scalar():
+    """Regression: the vmapped eq.-2 path is the scalar oracle, fp32 tol."""
+    def loss(params, batch):
+        return jnp.mean((params["w"] - batch) ** 2)
+
+    rng = np.random.RandomState(3)
+    params = {"w": jnp.asarray(rng.randn(6), jnp.float32)}
+    deltas = {"w": jnp.asarray(np.sign(rng.randn(5, 6)), jnp.float32)}
+    batches = jnp.asarray(rng.randn(5, 6), jnp.float32)
+    batched = np.asarray(S.batched_loss_scores(loss, params, deltas,
+                                               batches, beta=0.05))
+    scalar = [S.loss_score(loss, params, {"w": deltas["w"][i]},
+                           batches[i], beta=0.05) for i in range(5)]
+    np.testing.assert_allclose(batched, scalar, rtol=1e-5, atol=1e-6)
+
+
+def test_batched_loss_scores_accepts_cached_baseline():
+    def loss(params, batch):
+        return jnp.mean((params["w"] - batch) ** 2)
+
+    params = {"w": jnp.zeros(4)}
+    deltas = {"w": jnp.ones((3, 4))}
+    batches = jnp.ones((3, 4))
+    base = jax.vmap(lambda b: loss(params, b))(batches)
+    with_cache = S.batched_loss_scores(loss, params, deltas, batches,
+                                       beta=0.1, baseline=base)
+    without = S.batched_loss_scores(loss, params, deltas, batches, beta=0.1)
+    np.testing.assert_allclose(np.asarray(with_cache), np.asarray(without),
+                               atol=1e-7)
