@@ -1,0 +1,137 @@
+"""Simulator throughput + multi-validator dedup benchmark.
+
+Part A — churn throughput: a synthetic churn scenario at several peer
+counts; reports rounds/sec, the checkpoint validator's compiled calls
+per round (must stay flat — the batched stages are O(1) dispatches
+regardless of peer count), and the size of the shared local-step jit
+cache (must stay at 1 program however many same-shape peers churn in).
+
+Part B — validator redundancy: a 2-validator scenario drives
+``Chain.post_weights`` → ``Chain.consensus_weights`` end-to-end and
+asserts the baseline-loss dedup across validators via per-validator
+compiled-call counts: the secondary validator issues ZERO baseline calls
+(it reads the checkpoint pointer's BaselineCache) and strictly fewer
+compiled calls than the primary.
+
+Run:  PYTHONPATH=src python benchmarks/sim_bench.py [--rounds N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "benchmarks")
+import common  # noqa: E402
+
+from repro.configs.registry import tiny_config          # noqa: E402
+from repro.sim import (PeerSpec, Scenario, SimEngine,    # noqa: E402
+                       ValidatorSpec)
+from repro.training import peer as peer_mod             # noqa: E402
+
+
+def churn_scenario(num_peers: int, rounds: int, seed: int = 0) -> Scenario:
+    """Half stable honest peers, half transients cycling through."""
+    stable = tuple(PeerSpec(uid=f"core-{i}")
+                   for i in range(num_peers // 2))
+    q = max(rounds // 4, 1)
+    transient = tuple(
+        PeerSpec(uid=f"churn-{i}",
+                 join_round=(i % 3) * q,
+                 leave_round=(i % 3) * q + 2 * q)
+        for i in range(num_peers - len(stable)))
+    return Scenario(name=f"churn-{num_peers}", rounds=rounds, seed=seed,
+                    peers=stable + transient)
+
+
+def _cfg():
+    return tiny_config()
+
+
+def _local_programs() -> int:
+    return sum(len(d) for d in peer_mod._LOCAL_JIT_CACHE.values())
+
+
+def bench_churn(num_peers: int, rounds: int):
+    cache_before = _local_programs()
+    engine = SimEngine.from_scenario(
+        churn_scenario(num_peers, rounds), _cfg(), batch=2, seq_len=32)
+    v = list(engine.validators.values())[0]
+    t0 = time.perf_counter()
+    engine.run_round(0)                       # compile round
+    compile_s = time.perf_counter() - t0
+    calls0 = v.compiled_calls
+    t0 = time.perf_counter()
+    for rnd in range(1, rounds):
+        engine.run_round(rnd)
+    steady = time.perf_counter() - t0
+    return {
+        "peers": num_peers, "rounds": rounds,
+        "compile_round_s": compile_s,
+        "steady_rounds_per_s": (rounds - 1) / steady if steady else 0.0,
+        "compiled_calls_per_round": (v.compiled_calls - calls0)
+        / max(rounds - 1, 1),
+        # jitted local-step programs THIS engine added (shared across all
+        # its same-shape peers, including every churn join)
+        "local_step_programs": _local_programs() - cache_before,
+    }
+
+
+def bench_two_validators(rounds: int):
+    scenario = Scenario(
+        name="dual-validator", rounds=rounds,
+        peers=tuple(PeerSpec(uid=f"peer-{i}") for i in range(6)),
+        validators=(ValidatorSpec(uid="val-primary", stake=1000.0),
+                    ValidatorSpec(uid="val-replica", stake=400.0)))
+    engine = SimEngine.from_scenario(scenario, _cfg(), batch=2,
+                                     seq_len=32)
+    engine.run(rounds)
+    primary = engine.validators["val-primary"]
+    replica = engine.validators["val-replica"]
+    consensus = engine.chain.consensus_weights()
+    # post_weights -> consensus_weights exercised end-to-end
+    assert set(engine.chain._weights) == {"val-primary", "val-replica"}
+    assert consensus and abs(sum(consensus.values()) - 1.0) < 1e-6
+    # the dedup claim, in compiled-call counts: the replica reads the
+    # checkpoint pointer's baselines instead of recomputing them
+    assert primary.baseline_calls == rounds, primary.baseline_calls
+    assert replica.baseline_calls == 0, replica.baseline_calls
+    assert replica.compiled_calls < primary.compiled_calls
+    cache = primary.baseline_cache
+    return [
+        {"validator": "val-primary", "stake": 1000.0,
+         "compiled_calls": primary.compiled_calls,
+         "baseline_calls": primary.baseline_calls,
+         "cache_hits": cache.hits, "cache_misses": cache.misses},
+        {"validator": "val-replica", "stake": 400.0,
+         "compiled_calls": replica.compiled_calls,
+         "baseline_calls": replica.baseline_calls,
+         "cache_hits": cache.hits, "cache_misses": cache.misses},
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--peers", type=int, nargs="*", default=[8, 16, 32])
+    args = ap.parse_args()
+
+    rows = [bench_churn(n, args.rounds) for n in args.peers]
+    common.emit("sim_bench_churn", rows,
+                ["peers", "compile_round_s", "steady_rounds_per_s",
+                 "compiled_calls_per_round", "local_step_programs"])
+    assert len({r["local_step_programs"] for r in rows}) == 1, \
+        "same-shape peers must share ONE local-step program"
+
+    vrows = bench_two_validators(args.rounds)
+    common.emit("sim_bench_validators", vrows,
+                ["validator", "stake", "compiled_calls",
+                 "baseline_calls", "cache_hits", "cache_misses"])
+    print(f"\nbaseline dedup: replica skipped "
+          f"{vrows[0]['baseline_calls']} baseline compiled calls "
+          f"({vrows[1]['compiled_calls']} vs "
+          f"{vrows[0]['compiled_calls']} total compiled calls)")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,11 @@ class BucketStore:
         self.buckets[owner] = Bucket(owner, read_key)
         return read_key
 
+    def remove_bucket(self, owner: str) -> None:
+        """Churn: the provider deletes a deregistered peer's bucket. Reads
+        and window checks against it degrade to absent, never KeyError."""
+        self.buckets.pop(owner, None)
+
     @staticmethod
     def gradient_key(round_idx: int) -> str:
         return f"grad/round-{round_idx:08d}"
@@ -71,8 +76,13 @@ class BucketStore:
     def within_put_window(self, owner: str, round_idx: int,
                           window_blocks: int) -> bool:
         """§3.2 check (a): the object must exist and have been put inside
-        [round start, round start + window)."""
-        meta = self.buckets[owner].head(self.gradient_key(round_idx))
+        [round start, round start + window). A missing bucket (churned or
+        deregistered peer) is simply "no payload", not an error — the
+        incentive layer must keep scoring the peers that are still here."""
+        bucket = self.buckets.get(owner)
+        if bucket is None:
+            return False
+        meta = bucket.head(self.gradient_key(round_idx))
         if meta is None:
             return False
         start = round_idx * self.chain.blocks_per_round

@@ -85,11 +85,23 @@ class Chain:
         self.checkpoint_pointer = top.uid
         return rec
 
+    def set_checkpoint_pointer(self, uid: str) -> None:
+        """Failover: re-point the canonical checkpoint at another staked
+        validator (the simulator does this when the top-staked validator
+        goes offline; newcomers and recovering validators sync from it)."""
+        assert uid in self.validators, uid
+        self.checkpoint_pointer = uid
+
     # ---- incentive bulletin ----------------------------------------
     def post_weights(self, validator_uid: str,
                      weights: Dict[str, float]) -> None:
         assert validator_uid in self.validators, "must stake to post"
         self._weights[validator_uid] = dict(weights)
+
+    def withdraw_weights(self, validator_uid: str) -> None:
+        """Drop a validator's posted weights (e.g. pruning an offline
+        validator so its stale bulletin stops steering consensus)."""
+        self._weights.pop(validator_uid, None)
 
     def consensus_weights(self) -> Dict[str, float]:
         """Stake-weighted median across validators (Yuma-consensus-lite)."""

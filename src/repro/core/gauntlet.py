@@ -8,7 +8,10 @@ through an explicit :class:`RoundContext` blackboard:
 ``fast-filter``
     Large set F_t (top-G always included, §3.3): put-window, format and
     sync-score checks; applies the φ penalty on failure and caches every
-    fetched payload on the context so later stages never re-fetch.
+    fetched payload on the context so later stages never re-fetch. The
+    sync-score math for the whole filter set is **vectorized** into one
+    jitted call over a (|F_t|, N) sample matrix — only the bucket reads
+    and format checks remain host-side per peer.
 
 ``primary-eval``
     Small set S_t: **batched** LossScore (eq. 2). The eval set's payloads
@@ -16,8 +19,15 @@ through an explicit :class:`RoundContext` blackboard:
     (:func:`repro.demo.compress.stack_payloads`), the signed per-peer
     deltas and the stepped-parameter losses are ``vmap``-ed over that axis,
     and the baseline losses L(θ, D) are computed once per *unique* batch
-    then gathered back per peer — a single compiled call per round instead
-    of the 4·|S_t| dispatches of the per-peer loop.
+    (deduplicated within the assigned and within the random stack — their
+    shapes may differ) then gathered back per peer — O(1) compiled calls
+    per round instead of the 4·|S_t| dispatches of the per-peer loop. Baselines live in their own jitted
+    entry point so redundant validators can skip them entirely: with a
+    shared :class:`BaselineCache`, the chain's checkpoint-pointer validator
+    computes and publishes L(θ_step, D) per (step, batch digest) and every
+    other validator reads the cache instead of recomputing (the ROADMAP
+    multi-validator dedupe follow-up — asserted via per-validator
+    ``baseline_calls`` / ``compiled_calls`` in ``benchmarks/sim_bench.py``).
 
 ``scoreboard``
     Proof-of-computation μ update (batched eq. 3), OpenSkill LossRating
@@ -34,8 +44,10 @@ through an explicit :class:`RoundContext` blackboard:
 :meth:`Validator.run_round` composes ``self.stages`` in order; callers may
 reorder, drop or substitute stages (benchmarks time individual stages,
 tests drive them one at a time). ``Validator.compiled_calls`` counts
-invocations of the batched jit entry points — O(1) per round regardless of
-|S_t|, which ``benchmarks/gauntlet_bench.py`` measures at 8→64 peers.
+invocations of the batched jit entry points — sync-scores, baselines,
+primary scores, aggregate: at most 4 per round regardless of |F_t| or
+|S_t|, which ``benchmarks/gauntlet_bench.py`` measures at 8→64 peers
+(baselines drop to 0 on a cache hit).
 
 The jitted entry points retrace when the eval-set / contributor-set sizes
 change; those sizes are bounded by ``eval_set_size`` / ``top_g`` and
@@ -44,7 +56,6 @@ stabilize after the first rounds.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import hashlib
 from typing import Any, Callable, Dict, List, Optional
 
@@ -151,19 +162,62 @@ def _stack_batches(batches: List[Any]):
 def _unique_batches(batches: List[Any]):
     """Deduplicate a list of batches by content.
 
-    Returns (unique_batches, index) with ``index[i]`` the row of
+    Returns (unique_batches, index, keys): ``index[i]`` is the row of
     ``batches[i]`` inside ``unique_batches`` — peers sharing an eval batch
-    share one baseline-loss evaluation.
+    share one baseline-loss evaluation — and ``keys[j]`` is the content
+    digest of ``unique_batches[j]`` (the :class:`BaselineCache` key, so the
+    same dedup extends across validators).
     """
     slots: Dict[bytes, int] = {}
-    uniq, index = [], []
+    uniq, index, keys = [], [], []
     for b in batches:
         k = _batch_key(b)
         if k not in slots:
             slots[k] = len(uniq)
             uniq.append(b)
+            keys.append(k)
         index.append(slots[k])
-    return uniq, np.asarray(index, np.int32)
+    return uniq, np.asarray(index, np.int32), keys
+
+
+class BaselineCache:
+    """Cross-validator bulletin of baseline losses L(θ_step, D).
+
+    Redundant validators evaluate the *same* peers on the *same*
+    deterministic batches against bit-identical replicas of θ, so their
+    baseline losses are pure duplicates. The validator named by the
+    chain's ``checkpoint_pointer`` publishes its baselines per
+    (model step, batch digest); the others look them up and skip the
+    baseline compiled call entirely. Only the current step is retained —
+    θ changes every aggregation, so older entries can never hit.
+
+    Lookup is all-or-nothing, so the dedup pays off when validators
+    evaluate the same peers — i.e. ``eval_set_size`` covers the in-window
+    candidates (the ``SimEngine.from_scenario`` default). With smaller,
+    independently-sampled eval sets the key sets differ and replicas fall
+    back to computing their own baselines (correct, just not deduped);
+    partial per-key reuse is a stated ROADMAP follow-up.
+    """
+
+    def __init__(self):
+        self._step: Optional[int] = None
+        self._vals: Dict[bytes, float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def publish(self, step: int, keys: List[bytes], values) -> None:
+        if step != self._step:
+            self._step, self._vals = step, {}
+        for k, v in zip(keys, values):
+            self._vals[k] = float(v)
+
+    def lookup(self, step: int, keys: List[bytes]):
+        """All-or-nothing: per-key baselines for ``step``, else None."""
+        if step != self._step or any(k not in self._vals for k in keys):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return [self._vals[k] for k in keys]
 
 
 class Validator:
@@ -172,7 +226,8 @@ class Validator:
     def __init__(self, uid: str, params, metas, eval_loss_fn: Callable,
                  hp: TrainConfig, chain: Chain, store: BucketStore,
                  data_fns: Dict[str, Callable], stake: float = 1000.0,
-                 rng: Optional[np.random.RandomState] = None):
+                 rng: Optional[np.random.RandomState] = None,
+                 baseline_cache: Optional[BaselineCache] = None):
         self.uid = uid
         self.params = params
         self.metas = metas
@@ -189,6 +244,8 @@ class Validator:
         self.step = 0
         self.current_top_g: List[str] = []
         self.compiled_calls = 0        # batched jit-entry invocations
+        self.baseline_calls = 0        # baseline-loss invocations (cacheable)
+        self.baseline_cache = baseline_cache
         self._last_fast_check: Dict[str, int] = {}
         chain.register_validator(uid, stake)
         # the composable round pipeline — callers may substitute stages
@@ -196,28 +253,50 @@ class Validator:
             self.stage_fast_filter, self.stage_primary_eval,
             self.stage_scoreboard, self.stage_aggregate]
         self._primary = jax.jit(self._primary_impl)
-        self._agg = jax.jit(functools.partial(demo_opt.aggregate_apply,
-                                              metas=self.metas))
+        self._baselines = jax.jit(self._baselines_impl)
+        self._sync_scores = jax.jit(self._sync_scores_impl)
+        # the SAME compiled aggregate program every peer replica uses —
+        # bit-identity by construction, one compile per shape fleet-wide
+        self._agg = demo_opt.shared_aggregate_apply(params, metas,
+                                                    hp.demo_chunk)
 
     # ------------------------------------------------------------ pieces
+    def _baselines_impl(self, params, uniq_a, uniq_r):
+        """Baseline losses L(θ, D) for the round's unique assigned and
+        unassigned batches (separate stacks — their shapes may differ),
+        in one compiled call. This is the part of primary eval that is
+        identical across redundant validators, hence its own jit entry
+        point (skippable on a :class:`BaselineCache` hit)."""
+        base_a = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_a)
+        base_r = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_r)
+        return base_a, base_r
+
     def _primary_impl(self, params, stacked, uniq_a, uniq_r,
-                      idx_a, idx_r, beta):
-        """One compiled call for the whole of S_t: vmapped signed deltas,
-        per-unique-batch baselines, vmapped stepped losses (eq. 2).
+                      idx_a, idx_r, base_a, base_r, beta):
+        """One compiled call for the whole of S_t: vmapped signed deltas
+        and vmapped stepped losses (eq. 2) against precomputed baselines.
 
         Only the *unique* batches are staged to the device; the per-peer
-        views are gathered from them via idx_a/idx_r inside the trace."""
+        views (and their baselines) are gathered via idx_a/idx_r inside
+        the trace."""
         deltas = jax.vmap(
             lambda pl: demo_opt.single_peer_delta(pl, self.metas))(stacked)
         batches_a = jax.tree.map(lambda u: u[idx_a], uniq_a)
         batches_r = jax.tree.map(lambda u: u[idx_r], uniq_r)
-        base_a = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_a)
-        base_r = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_r)
         s_a = S.batched_loss_scores(self.eval_loss, params, deltas,
                                     batches_a, beta, baseline=base_a[idx_a])
         s_r = S.batched_loss_scores(self.eval_loss, params, deltas,
                                     batches_r, beta, baseline=base_r[idx_r])
         return s_a, s_r
+
+    @staticmethod
+    def _sync_scores_impl(ref, samples, alpha):
+        """§3.2 sync scores for the whole filter set in one fused call:
+        mean |θ^val_i − θ^peer_i| / α per row of the (K, N) sample
+        matrix (the batched form of :func:`repro.core.scores.sync_score`)."""
+        diff = jnp.abs(samples.astype(jnp.float32)
+                       - ref.astype(jnp.float32)[None, :])
+        return jnp.mean(diff, axis=1) / jnp.maximum(alpha, 1e-12)
 
     def _state(self, peer: str) -> PeerState:
         if peer not in self.peer_state:
@@ -268,28 +347,42 @@ class Validator:
         except Exception:
             return False
 
-    def _fast_check(self, ctx: RoundContext, peer: str,
-                    sync_ref: np.ndarray) -> bool:
-        """§3.2 checks (a)-(c) + sync score; pure predicate, no penalty."""
-        # (a)+(b): payload present and inside the put window
+    def _precheck(self, ctx: RoundContext, peer: str) -> bool:
+        """§3.2 checks (a)-(c): put window, payload present, format."""
         if not self.store.within_put_window(
                 peer, ctx.round_idx, self.chain.blocks_per_round):
             return False
         payload = self._fetch_payload(ctx, peer)
-        # (c): format
-        if payload is None or not self._format_ok(payload):
-            return False
-        # sync score from the peer's sampled params
+        return payload is not None and self._format_ok(payload)
+
+    def _sync_sample(self, ctx: RoundContext, peer: str,
+                     sync_ref: np.ndarray) -> Optional[np.ndarray]:
+        """Fetch + validate the peer's published sync sample. A missing OR
+        malformed sample (wrong shape/dtype) is the peer's failure, never
+        the round's — Byzantine peers must not be able to abort evaluation
+        for everyone else — so any problem degrades to None."""
         try:
             rk = self.chain.peers[peer].bucket_read_key
             sample, _ = self.store.buckets[peer].get(
                 f"sync/round-{ctx.round_idx:08d}", rk)
-            sc = S.sync_score(sync_ref, sample, self.lr_at())
+            arr = np.asarray(sample, np.float32)
         except Exception:
-            # missing OR malformed sync sample (wrong shape/dtype) is the
-            # peer's failure, never the round's — Byzantine peers must not
-            # be able to abort evaluation for everyone else
+            return None
+        if arr.shape != np.asarray(sync_ref).shape:
+            return None
+        return arr
+
+    def _fast_check(self, ctx: RoundContext, peer: str,
+                    sync_ref: np.ndarray) -> bool:
+        """§3.2 checks (a)-(c) + sync score; pure predicate, no penalty.
+        Scalar reference path — the round pipeline batches the sync-score
+        math across F_t in :meth:`stage_fast_filter`."""
+        if not self._precheck(ctx, peer):
             return False
+        sample = self._sync_sample(ctx, peer, sync_ref)
+        if sample is None:
+            return False
+        sc = S.sync_score(sync_ref, sample, self.lr_at())
         return sc <= self.hp.sync_score_threshold
 
     def fast_evaluate(self, peer: str, round_idx: int) -> bool:
@@ -341,8 +434,33 @@ class Validator:
                     + pool[:max(0, fast_n - len(self.current_top_g))])
         sync_ref = S.sample_params_for_sync(
             self.params, jax.random.PRNGKey(ctx.round_idx))
+        # host-side per peer: bucket reads + format checks; the sync-score
+        # math itself is batched below into one compiled call for all of F_t
+        samples, sampled_peers = [], []
         for peer in fast_set:
-            ok = self._fast_check(ctx, peer, sync_ref)
+            if not self._precheck(ctx, peer):
+                continue
+            sample = self._sync_sample(ctx, peer, sync_ref)
+            if sample is not None:
+                samples.append(sample)
+                sampled_peers.append(peer)
+        passed: Dict[str, bool] = {}
+        if samples:
+            # pad rows to the next power of two: the sample count varies
+            # round to round under churn/lossy networks, and an exact-K
+            # shape would retrace every time it changes
+            k = len(samples)
+            mat = np.zeros((1 << (k - 1).bit_length() if k > 1 else 1,
+                            samples[0].size), np.float32)
+            mat[:k] = np.stack(samples)
+            scores = np.asarray(self._sync_scores(
+                jnp.asarray(sync_ref), jnp.asarray(mat),
+                jnp.float32(self.lr_at())))[:k]
+            self.compiled_calls += 1
+            for peer, sc in zip(sampled_peers, scores):
+                passed[peer] = bool(sc <= hp.sync_score_threshold)
+        for peer in fast_set:
+            ok = passed.get(peer, False)
             ctx.fast_pass[peer] = ok
             self._last_fast_check[peer] = ctx.round_idx
             st = self._state(peer)
@@ -373,11 +491,29 @@ class Validator:
                      for p in eval_set]
         batches_r = [self.data["unassigned"](p, ctx.round_idx)
                      for p in eval_set]
-        uniq_a, idx_a = _unique_batches(batches_a)
-        uniq_r, idx_r = _unique_batches(batches_r)
+        uniq_a, idx_a, keys_a = _unique_batches(batches_a)
+        uniq_r, idx_r, keys_r = _unique_batches(batches_r)
+        ua, ur = _stack_batches(uniq_a), _stack_batches(uniq_r)
+        na, ukeys = len(uniq_a), keys_a + keys_r
+        base_a = base_r = None
+        if self.baseline_cache is not None:
+            cached = self.baseline_cache.lookup(self.step, ukeys)
+            if cached is not None:
+                base_a = jnp.asarray(cached[:na], jnp.float32)
+                base_r = jnp.asarray(cached[na:], jnp.float32)
+        if base_a is None:
+            base_a, base_r = self._baselines(self.params, ua, ur)
+            self.compiled_calls += 1
+            self.baseline_calls += 1
+            if (self.baseline_cache is not None
+                    and self.chain.checkpoint_pointer == self.uid):
+                self.baseline_cache.publish(
+                    self.step, ukeys,
+                    np.concatenate([np.asarray(base_a),
+                                    np.asarray(base_r)]))
         s_a, s_r = self._primary(
-            self.params, stacked, _stack_batches(uniq_a),
-            _stack_batches(uniq_r), jnp.asarray(idx_a), jnp.asarray(idx_r),
+            self.params, stacked, ua, ur,
+            jnp.asarray(idx_a), jnp.asarray(idx_r), base_a, base_r,
             jnp.float32(beta))
         self.compiled_calls += 1
         s_a, s_r = np.asarray(s_a), np.asarray(s_r)

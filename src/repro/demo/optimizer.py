@@ -11,6 +11,7 @@ host-level validator path).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -135,3 +136,33 @@ def single_peer_delta(payload_tree, metas, apply_sign: bool = True):
     if apply_sign:
         dense = jax.tree.map(jnp.sign, dense)
     return dense
+
+
+# ------------------------------------------------------ shared jit cache
+
+_AGG_JIT_CACHE: dict = {}
+
+
+def tree_signature(params) -> tuple:
+    """Hashable (structure, shapes, dtypes) fingerprint of a pytree —
+    the jit-cache key ingredient for shape-polymorphic shared programs."""
+    leaves, treedef = jax.tree.flatten(params)
+    return (treedef,
+            tuple((tuple(l.shape), str(jnp.asarray(l).dtype))
+                  for l in leaves))
+
+
+def shared_aggregate_apply(params, metas, chunk: int):
+    """One jitted :func:`aggregate_apply` per (chunk, tree signature).
+
+    The validator and every peer replica fetch the SAME compiled callable
+    here, so coordinated aggregation runs one program fleet-wide (replicas
+    stay bit-identical by construction) and an N-peer simulation compiles
+    it once instead of N+1 times.
+    """
+    key = (chunk, *tree_signature(params))
+    fn = _AGG_JIT_CACHE.get(key)
+    if fn is None:
+        fn = _AGG_JIT_CACHE[key] = jax.jit(
+            functools.partial(aggregate_apply, metas=metas))
+    return fn

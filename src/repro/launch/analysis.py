@@ -334,3 +334,42 @@ def save_report(r: Roofline, path: str):
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(r.to_dict(), f, indent=2)
+
+
+# ------------------------------------------------- testnet sim telemetry
+#
+# The discrete-event simulator (repro.sim) exports per-round telemetry
+# JSON; these helpers turn an export (path or already-loaded dict) into
+# the summary table the scenario CI job and notebooks consume.
+
+
+def load_sim_telemetry(path: str) -> Dict:
+    from repro.sim.telemetry import Telemetry
+    return Telemetry.load(path)
+
+
+def sim_telemetry_summary(telemetry) -> Dict:
+    """Headline numbers for one scenario run.
+
+    ``telemetry`` is a path or the dict from ``Telemetry.to_dict()``.
+    The per-round reductions come from the export's embedded ``summary``
+    (one implementation, in ``repro.sim.telemetry``); this adds the
+    cross-round claims the CI job checks — ``honest_majority_all_rounds``
+    is the paper's survival claim in one bool: honest peers hold >50% of
+    consensus incentive in every round.
+    """
+    tel = (load_sim_telemetry(telemetry) if isinstance(telemetry, str)
+           else telemetry)
+    rounds = tel.get("rounds", [])
+    base = dict(tel.get("summary", {}))
+    shares = [r["honest_share"] for r in rounds]
+    base.update({
+        "scenario": tel.get("scenario"),
+        "seed": tel.get("seed"),
+        "min_honest_share": min(shares) if shares else None,
+        "honest_majority_all_rounds": bool(shares)
+        and all(s > 0.5 for s in shares),
+        "network_drops": sum((r.get("network") or {}).get("dropped", 0)
+                             for r in rounds),
+    })
+    return base

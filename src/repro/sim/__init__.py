@@ -1,0 +1,23 @@
+"""Testnet-in-a-box: a seeded discrete-event simulator of the paper's
+permissionless network — churn, latency/loss links, adversary schedules,
+and multi-validator consensus — keyed to the chain's block clock.
+
+    from repro.sim import SimEngine, get_scenario
+    engine = SimEngine.from_scenario(get_scenario("byzantine_wave"))
+    telemetry = engine.run()
+    telemetry.to_json("telemetry.json")
+"""
+from repro.sim.engine import SimEngine
+from repro.sim.network import (LinkProfile, NetworkModel, SimBucketStore,
+                               estimate_payload_bytes)
+from repro.sim.scenario import (SCENARIOS, LinkSpec, PeerSpec, Scenario,
+                                ValidatorSpec, get_scenario,
+                                register_scenario)
+from repro.sim.telemetry import HONEST_BEHAVIORS, Telemetry
+
+__all__ = [
+    "SimEngine", "LinkProfile", "NetworkModel", "SimBucketStore",
+    "estimate_payload_bytes", "SCENARIOS", "LinkSpec", "PeerSpec",
+    "Scenario", "ValidatorSpec", "get_scenario", "register_scenario",
+    "HONEST_BEHAVIORS", "Telemetry",
+]

@@ -1,0 +1,391 @@
+"""Discrete-event testnet engine: the paper's permissionless network as a
+seeded, block-accurate simulation.
+
+The event queue is keyed to :class:`repro.comms.chain.Chain` blocks — the
+same clock the put-window enforcement reads — so everything that makes a
+live network hard is an *event*, not a hard-coded peer behaviour:
+
+* **churn** — peers join (bootstrapping their replica from the chain's
+  checkpoint pointer) and leave (their bucket vanishes, possibly with a
+  put still in flight);
+* **delayed arrivals** — :class:`repro.sim.network.SimBucketStore` turns
+  bucket puts into arrival events whose delay is bandwidth-proportional
+  in the payload bytes;
+* **adversary schedules** — behaviour flips at scheduled rounds compose
+  the ``repro.core.byzantine`` transforms over time (honest-then-turncoat);
+* **validator failover** — staked validators go dark and recover,
+  re-pointing the chain checkpoint and resyncing from it.
+
+Multiple validators run concurrent round pipelines against the same chain
+and buckets: each posts its weights (``Chain.post_weights``), incentive
+resolves through the stake-weighted median (``Chain.consensus_weights``),
+every replica aggregates with the *consensus* top-G so the fleet stays
+bit-identical, and redundant validators skip the baseline-loss work via
+the shared :class:`repro.core.gauntlet.BaselineCache` keyed through the
+checkpoint pointer.
+
+``repro.training.round_loop.run_rounds`` is a thin compatibility wrapper
+over this engine (single validator, perfect network, no churn).
+"""
+from __future__ import annotations
+
+import heapq
+import zlib
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.comms.chain import Chain
+from repro.core import scores as S
+from repro.core.gauntlet import BaselineCache, RoundReport, Validator
+from repro.sim.network import (NetworkModel, SimBucketStore,
+                               estimate_payload_bytes)
+from repro.sim.scenario import PeerSpec, Scenario
+from repro.sim.telemetry import HONEST_BEHAVIORS, Telemetry
+from repro.training.peer import PeerConfig, PeerNode
+
+
+class SimEngine:
+    """Schedules and drives one scenario run.
+
+    Can be constructed around pre-built components (the ``run_rounds``
+    compatibility path) or from a declarative :class:`Scenario` via
+    :meth:`from_scenario`.
+    """
+
+    def __init__(self, chain: Chain, store, validators: List[Validator],
+                 peers: Dict[str, PeerNode], *,
+                 telemetry: Optional[Telemetry] = None,
+                 grad_fn: Optional[Callable] = None,
+                 fast_set_size: Optional[int] = None,
+                 eval_every: int = 5,
+                 eval_batch_fn: Optional[Callable] = None):
+        assert validators, "need at least one validator"
+        self.chain = chain
+        self.store = store
+        self.validators: Dict[str, Validator] = {v.uid: v
+                                                 for v in validators}
+        self.peers: Dict[str, PeerNode] = dict(peers)
+        self.offline_validators: set = set()
+        self.telemetry = telemetry or Telemetry("adhoc", 0)
+        self.grad_fn = grad_fn
+        self.hp = validators[0].hp
+        self.fast_set_size = fast_set_size
+        self.eval_every = eval_every
+        self.eval_batch_fn = eval_batch_fn
+        self.multi = len(self.validators) > 1
+        self.reports: Dict[str, List[RoundReport]] = {
+            uid: [] for uid in self.validators}
+        self.val_losses: List[float] = []
+        self._queue: list = []           # (block, seq, fn) heap
+        self._seq = 0
+        self._rounds = 0                 # scenario default for run()
+        if isinstance(store, SimBucketStore):
+            store.scheduler = self.schedule_in
+
+    # ------------------------------------------------------------ events
+    def schedule_at(self, block: int, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._queue, (block, self._seq, fn))
+        self._seq += 1
+
+    def schedule_in(self, delay_blocks: int, fn: Callable[[], None]) -> None:
+        self.schedule_at(self.chain.block + delay_blocks, fn)
+
+    def schedule_round(self, round_idx: int, fn: Callable[[], None]) -> None:
+        self.schedule_at(round_idx * self.chain.blocks_per_round, fn)
+
+    def _drain(self, upto_block: int) -> None:
+        while self._queue and self._queue[0][0] <= upto_block:
+            _, _, fn = heapq.heappop(self._queue)
+            fn()
+
+    # ---------------------------------------------------- churn handlers
+    def _join(self, spec: PeerSpec) -> None:
+        if spec.uid in self.peers:
+            return
+        assert self.grad_fn is not None, "engine built without grad_fn"
+        cp = self.validators[self.chain.checkpoint_pointer]
+        pc = PeerConfig(uid=spec.uid, behavior=spec.behavior,
+                        data_multiplier=spec.data_multiplier,
+                        desync_rounds=spec.desync_rounds,
+                        desync_start=spec.desync_start,
+                        copy_victim=spec.copy_victim)
+        # a joiner bootstraps its replica from the canonical checkpoint
+        self.peers[spec.uid] = PeerNode(pc, cp.params, cp.metas,
+                                        self.grad_fn, self.hp, self.chain,
+                                        self.store, cp.data)
+        self.telemetry.log_event(self.chain.block, "join", spec.uid)
+
+    def _leave(self, uid: str) -> None:
+        if uid not in self.peers:
+            return
+        self.chain.deregister_peer(uid)
+        self.store.remove_bucket(uid)
+        del self.peers[uid]
+        self.telemetry.log_event(self.chain.block, "leave", uid)
+
+    def _set_behavior(self, uid: str, behavior: str) -> None:
+        node = self.peers.get(uid)
+        if node is not None:
+            node.set_behavior(behavior, self.chain.round_of())
+            self.telemetry.log_event(self.chain.block, "behavior",
+                                     f"{uid}->{behavior}")
+
+    # ------------------------------------------------- validator up/down
+    def _validator_down(self, uid: str) -> None:
+        if uid in self.validators and uid not in self.offline_validators:
+            self.offline_validators.add(uid)
+            # prune the stale bulletin so consensus stops counting it
+            self.chain.withdraw_weights(uid)
+            self.telemetry.log_event(self.chain.block, "validator_down",
+                                     uid)
+
+    def _validator_up(self, uid: str) -> None:
+        if uid not in self.offline_validators:
+            return
+        # resync the recovered replica from the *current* checkpoint
+        # pointer (a survivor) BEFORE it can become the pointer again
+        cp = self.validators.get(self.chain.checkpoint_pointer)
+        v = self.validators[uid]
+        if cp is not None and v is not cp:
+            v.params, v.step = cp.params, cp.step
+            v.current_top_g = list(cp.current_top_g)
+        self.offline_validators.discard(uid)
+        self._repoint_checkpoint()
+        self.telemetry.log_event(self.chain.block, "validator_up", uid)
+
+    def _active_validators(self) -> List[Validator]:
+        return [v for uid, v in self.validators.items()
+                if uid not in self.offline_validators]
+
+    def _repoint_checkpoint(self) -> None:
+        act = self._active_validators()
+        if not act:
+            return
+        top = max(act, key=lambda v: self.chain.validators[v.uid].stake)
+        if self.chain.checkpoint_pointer != top.uid:
+            self.chain.set_checkpoint_pointer(top.uid)
+            self.telemetry.log_event(self.chain.block, "checkpoint",
+                                     f"->{top.uid}")
+
+    def _validator_order(self) -> List[Validator]:
+        """Checkpoint-pointer validator first (it publishes the baseline
+        cache the others read), then by stake, then uid."""
+        cp = self.chain.checkpoint_pointer
+        return sorted(self._active_validators(),
+                      key=lambda v: (v.uid != cp,
+                                     -self.chain.validators[v.uid].stake,
+                                     v.uid))
+
+    # ------------------------------------------------------------ rounds
+    def run_round(self, rnd: int) -> None:
+        bpr = self.chain.blocks_per_round
+        start, end = rnd * bpr, (rnd + 1) * bpr
+        # snapshot BEFORE the boundary drain: an arrival landing exactly on
+        # the round-start block belongs to this round's network delta
+        net = getattr(self.store, "network", None)
+        net_before = net.stats.as_dict() if net else None
+        self._drain(start)               # joins/leaves/flips/failovers
+        # --- peers publish; uploads may arrive later (or never)
+        active = list(self.peers)
+        for uid in active:
+            node = self.peers.get(uid)
+            if node is not None:
+                node.produce(rnd)
+        # --- the put window elapses block by block; arrivals land
+        while self.chain.block < end:
+            self.chain.advance(1)
+            self._drain(min(self.chain.block, end - 1))
+        # --- concurrent validator pipelines, composing each validator's
+        # OWN stage list (custom/spliced stages keep working); the
+        # pipeline is split at stage_aggregate so every validator posts
+        # before anyone aggregates
+        self._repoint_checkpoint()
+        order = self._validator_order()
+        ctxs, cuts = {}, {}
+        for v in order:
+            stages = list(v.stages)
+            try:
+                cut = stages.index(v.stage_aggregate)
+            except ValueError:
+                cut = len(stages)
+            ctx = v.build_context(
+                rnd, [u for u in active if u in self.chain.peers],
+                fast_set_size=self.fast_set_size)
+            for stage in stages[:cut]:         # ... incl. the chain post
+                ctx = stage(ctx)
+            ctxs[v.uid], cuts[v.uid] = ctx, (stages, cut)
+        # --- incentive resolves across validators by stake-weighted median
+        consensus = self.chain.consensus_weights()
+        if self.multi:
+            agg_weights = S.top_g_weights(consensus, self.hp.top_g)
+        else:
+            agg_weights = ctxs[order[0].uid].weights if order else {}
+        # --- coordinated aggregation: every replica applies the same rule
+        lr = 0.0
+        for v in order:
+            ctx = ctxs[v.uid]
+            if self.multi:
+                ctx.weights = dict(agg_weights)
+            stages, cut = cuts[v.uid]
+            for stage in stages[cut:]:
+                ctx = stage(ctx)
+            ctxs[v.uid] = ctx
+            lr = ctx.lr
+            self.reports[v.uid].append(ctx.report())
+        for uid in active:
+            node = self.peers.get(uid)
+            if node is not None:
+                node.apply_round(rnd, agg_weights, lr)
+        self._record(rnd, active, ctxs, order, consensus, net, net_before)
+
+    def _record(self, rnd, active, ctxs, order, consensus, net,
+                net_before) -> None:
+        val_loss = None
+        if (self.eval_batch_fn is not None and rnd % self.eval_every == 0
+                and order):
+            cp = self.validators[self.chain.checkpoint_pointer]
+            val_loss = float(cp.eval_loss(cp.params,
+                                          self.eval_batch_fn(rnd)))
+            self.val_losses.append(val_loss)
+            for v in order:
+                self.reports[v.uid][-1].train_loss = val_loss
+        behav = {uid: node.pc.behavior
+                 for uid, node in self.peers.items()}
+        total_w = sum(consensus.values())
+        honest_w = sum(w for p, w in consensus.items()
+                       if behav.get(p) in HONEST_BEHAVIORS)
+        net_delta = None
+        if net is not None:
+            after = net.stats.as_dict()
+            net_delta = {k: after[k] - net_before[k] for k in after}
+        cp_uid = self.chain.checkpoint_pointer
+        cp = self.validators.get(cp_uid)
+        self.telemetry.record_round(
+            round=rnd, block=self.chain.block,
+            active_peers=sorted(self.peers),
+            honest_share=(honest_w / total_w if total_w > 0 else 0.0),
+            consensus=consensus,
+            fast_pass_rate={
+                v.uid: (sum(ctxs[v.uid].fast_pass.values())
+                        / len(ctxs[v.uid].fast_pass)
+                        if ctxs[v.uid].fast_pass else 1.0)
+                for v in order},
+            eval_counts={v.uid: len(ctxs[v.uid].eval_set) for v in order},
+            mu={p: cp.peer_state[p].mu for p in sorted(self.peers)
+                if cp and p in cp.peer_state},
+            ordinals={p: cp.book.ordinal(p) for p in sorted(self.peers)}
+            if cp else {},
+            val_loss=val_loss, lr=(order and ctxs[order[0].uid].lr) or 0.0,
+            checkpoint=cp_uid,
+            offline_validators=sorted(self.offline_validators),
+            network=net_delta)
+
+    def run(self, num_rounds: Optional[int] = None) -> Telemetry:
+        start = self.chain.round_of()
+        n = num_rounds if num_rounds is not None else self._rounds
+        for rnd in range(start, start + n):
+            self.run_round(rnd)
+        return self.telemetry
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def from_scenario(cls, scenario: Scenario, cfg=None,
+                      hp=None, *, batch: int = 4, seq_len: int = 64,
+                      eval_batch: int = 8,
+                      eval_every: Optional[int] = None,
+                      blocks_per_round: int = 10) -> "SimEngine":
+        """Wire a complete testnet from a declarative scenario."""
+        from repro.configs.base import TrainConfig
+        from repro.configs.registry import tiny_config
+        from repro.data import pipeline
+        from repro.demo import compress
+        from repro.models import model as M
+
+        cfg = cfg or tiny_config()
+        n_specs = len(scenario.peers)
+        hp = hp or TrainConfig(
+            seed=scenario.seed, learning_rate=3e-3, warmup_steps=2,
+            total_steps=max(100, scenario.rounds),
+            top_g=scenario.top_g or max(3, n_specs // 2),
+            eval_set_size=scenario.eval_set_size or n_specs,
+            demo_chunk=16, demo_topk=8, poc_gamma=0.6)
+        corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=scenario.seed)
+        chain = Chain(blocks_per_round=blocks_per_round)
+        network = NetworkModel(seed=scenario.seed)
+        store = SimBucketStore(chain, network)
+
+        def assigned(peer, rnd):
+            return pipeline.select_data(corpus, hp.seed, peer, rnd, batch,
+                                        seq_len)
+
+        def unassigned(peer, rnd):
+            return pipeline.unassigned_data(corpus, hp.seed, peer, rnd,
+                                            batch, seq_len)
+
+        data_fns = {"assigned": assigned, "unassigned": unassigned}
+        params = M.init_params(cfg, jax.random.PRNGKey(hp.seed))
+        metas = compress.tree_meta(params, hp.demo_chunk)
+        eval_loss = jax.jit(lambda p, b: M.loss_fn(p, b, cfg)[0])
+
+        def grad_fn(p, b):
+            return jax.grad(lambda pp: M.loss_fn(pp, b, cfg)[0])(p)
+
+        cache = BaselineCache() if len(scenario.validators) > 1 else None
+        validators = [
+            Validator(vs.uid, params, metas, eval_loss, hp, chain, store,
+                      data_fns, stake=vs.stake,
+                      rng=np.random.RandomState(
+                          (scenario.seed * 7919
+                           + zlib.crc32(vs.uid.encode())) % (2 ** 31)),
+                      baseline_cache=cache)
+            for vs in scenario.validators]
+        telemetry = Telemetry(scenario.name, scenario.seed, meta={
+            "model": cfg.name, "params": cfg.param_count(),
+            "peers": n_specs, "validators": len(scenario.validators),
+            "blocks_per_round": blocks_per_round,
+            "description": scenario.description})
+        engine = cls(chain, store, validators, {}, telemetry=telemetry,
+                     grad_fn=grad_fn,
+                     eval_every=eval_every
+                     or max(scenario.rounds // 6, 1),
+                     eval_batch_fn=lambda rnd: pipeline.unassigned_data(
+                         corpus, 99, "eval", rnd, eval_batch, seq_len))
+        engine._rounds = scenario.rounds
+        # resolve round-relative link specs against the real payload size
+        payload_bytes = estimate_payload_bytes(metas, hp.demo_topk)
+        network.default = scenario.default_link.resolve(payload_bytes,
+                                                        blocks_per_round)
+        for spec in scenario.peers:
+            if spec.link is not None:
+                network.links[spec.uid] = spec.link.resolve(
+                    payload_bytes, blocks_per_round)
+        # translate the declarative lifecycle into scheduled events
+        for spec in scenario.peers:
+            if spec.join_round <= 0:
+                engine._join(spec)
+            else:
+                engine.schedule_round(
+                    spec.join_round,
+                    lambda s=spec: engine._join(s))
+            if spec.leave_round is not None:
+                engine.schedule_round(
+                    spec.leave_round,
+                    lambda u=spec.uid: engine._leave(u))
+            if spec.rejoin_round is not None:
+                engine.schedule_round(
+                    spec.rejoin_round,
+                    lambda s=spec: engine._join(s))
+            for when, behavior in spec.behavior_schedule:
+                engine.schedule_round(
+                    when,
+                    lambda u=spec.uid, b=behavior:
+                    engine._set_behavior(u, b))
+        for vs in scenario.validators:
+            for down, up in vs.offline:
+                engine.schedule_round(
+                    down, lambda u=vs.uid: engine._validator_down(u))
+                engine.schedule_round(
+                    up, lambda u=vs.uid: engine._validator_up(u))
+        return engine

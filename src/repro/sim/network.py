@@ -1,0 +1,140 @@
+"""Network model for the testnet simulator: latency + loss around the
+bucket store.
+
+A peer's bucket put is an *upload*: it leaves the peer at the current
+chain block and lands in the bucket ``latency + size/bandwidth
+(+ jitter)`` blocks later — or never (stochastic drop). "Late" therefore
+stops being a hard-coded peer behaviour and becomes an emergent outcome
+of link quality vs. the put window: a slow or lossy link misses the
+window exactly the way a real over-the-internet peer does.
+
+The delay is bandwidth-proportional in the *submitted* ``size_bytes``
+(``repro.demo.compress.payload_bytes``), so bigger payloads genuinely
+take longer to arrive. Links are per-peer and independent — shared-
+capacity contention is a stated ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.comms.bucket import BucketStore
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkProfile:
+    """Concrete link quality, in chain-block units."""
+
+    latency_blocks: float = 0.0          # propagation delay
+    bytes_per_block: float = math.inf    # upload bandwidth
+    drop_prob: float = 0.0               # per-put loss probability
+    jitter_blocks: float = 0.0           # uniform extra delay in [0, jitter)
+
+
+PERFECT = LinkProfile()
+
+
+@dataclasses.dataclass
+class NetStats:
+    """Counters the telemetry layer reports per round (as deltas)."""
+
+    submitted: int = 0
+    delivered: int = 0
+    dropped: int = 0
+    orphaned: int = 0        # arrived after the peer's bucket was deleted
+    delayed_blocks: int = 0  # total in-flight blocks across delayed puts
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class NetworkModel:
+    """Seeded per-peer link model; every transit decision comes from one
+    RandomState so a scenario replays bit-identically under one seed."""
+
+    def __init__(self, default: LinkProfile = PERFECT,
+                 links: Optional[Dict[str, LinkProfile]] = None,
+                 seed: int = 0):
+        self.default = default
+        self.links: Dict[str, LinkProfile] = dict(links or {})
+        self.rng = np.random.RandomState(seed)
+        self.stats = NetStats()
+
+    def profile(self, uid: str) -> LinkProfile:
+        return self.links.get(uid, self.default)
+
+    def transit_blocks(self, uid: str, size_bytes: int) -> Optional[int]:
+        """Blocks until the put lands, or None if the upload is lost."""
+        p = self.profile(uid)
+        if self.rng.rand() < p.drop_prob:
+            return None
+        delay = p.latency_blocks
+        if p.bytes_per_block > 0 and math.isfinite(p.bytes_per_block):
+            delay += size_bytes / p.bytes_per_block
+        if p.jitter_blocks > 0:
+            delay += self.rng.rand() * p.jitter_blocks
+        return int(math.ceil(delay))
+
+
+def estimate_payload_bytes(metas, topk: int) -> int:
+    """Wire size of one compressed pseudo-gradient, from the chunk layout
+    alone (mirrors ``compress.payload_bytes``: fp32 vals + int16 idx)."""
+    import jax
+    total = 0
+    for m in jax.tree.leaves(metas):
+        total += m.num_chunks * topk * (4 + 2)
+    return total
+
+
+class SimBucketStore(BucketStore):
+    """A :class:`BucketStore` whose gradient puts transit a
+    :class:`NetworkModel`.
+
+    The simulation engine installs itself as ``scheduler`` (a callable
+    ``(delay_blocks, fn)``); delayed puts become discrete events that land
+    at the arrival block, stamped with the chain block *at arrival* — the
+    robust server-side timestamp the put-window check relies on (§3.2).
+    Without a scheduler (or with zero delay) puts land immediately, which
+    is exactly the legacy lock-step behaviour.
+
+    Sync samples (8 bytes) ride outside the model: peers write them
+    directly, matching the paper's "negligible bytes" framing.
+    """
+
+    def __init__(self, chain, network: NetworkModel):
+        super().__init__(chain)
+        self.network = network
+        self.scheduler: Optional[Callable[[int, Callable[[], None]], None]] \
+            = None
+
+    def put_gradient(self, owner: str, round_idx: int, payload,
+                     size_bytes: int) -> None:
+        stats = self.network.stats
+        stats.submitted += 1
+        delay = self.network.transit_blocks(owner, size_bytes)
+        if delay is None:
+            stats.dropped += 1
+            return
+        if delay <= 0 or self.scheduler is None:
+            self._deliver(owner, round_idx, payload, size_bytes)
+            return
+        stats.delayed_blocks += delay
+        self.scheduler(delay, functools.partial(
+            self._deliver, owner, round_idx, payload, size_bytes))
+
+    def _deliver(self, owner: str, round_idx: int, payload,
+                 size_bytes: int) -> None:
+        bucket = self.buckets.get(owner)
+        if bucket is None:              # peer churned while the put flew
+            self.network.stats.orphaned += 1
+            return
+        key = self.gradient_key(round_idx)
+        if bucket.head(key) is not None:
+            return                      # immutable per (round, key)
+        bucket.put(key, payload, block=self.chain.block,
+                   size_bytes=size_bytes)
+        self.network.stats.delivered += 1

@@ -1,0 +1,234 @@
+"""Declarative scenario specs for the testnet simulator + named registry.
+
+A :class:`Scenario` is pure data: which peers exist, when they join and
+leave, how their behaviour changes over time (adversary schedules
+composing ``repro.core.byzantine`` transforms via the peer behaviours),
+what their links look like, and which staked validators run — the engine
+(``repro.sim.engine``) turns it into a discrete-event schedule keyed to
+chain blocks. Link quality is declared in *round-relative* units
+(:class:`LinkSpec`) and resolved against the actual payload size at build
+time, so the same scenario is meaningful for any model size.
+
+Registry: decorate a builder ``def my_scenario(rounds, seed) -> Scenario``
+with :func:`register_scenario` and it becomes runnable by name from
+``examples/scenarios.py`` / ``benchmarks/sim_bench.py``. See
+``examples/SCENARIOS.md`` for the authoring guide.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.sim.network import LinkProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Link quality in round-relative units, resolved to a concrete
+    :class:`LinkProfile` once the payload size is known.
+
+    ``upload_rounds`` is the time one full payload takes to upload, as a
+    fraction of a round — 1.2 means the peer *cannot* make the put window
+    on bandwidth alone; 0.5 means it lands mid-window.
+    """
+
+    latency_rounds: float = 0.0
+    upload_rounds: float = 0.0
+    drop_prob: float = 0.0
+    jitter_rounds: float = 0.0
+
+    def resolve(self, payload_bytes: int,
+                blocks_per_round: int) -> LinkProfile:
+        bpb = (payload_bytes / (self.upload_rounds * blocks_per_round)
+               if self.upload_rounds > 0 else math.inf)
+        return LinkProfile(
+            latency_blocks=self.latency_rounds * blocks_per_round,
+            bytes_per_block=bpb,
+            drop_prob=self.drop_prob,
+            jitter_blocks=self.jitter_rounds * blocks_per_round)
+
+
+FAST_LINK = LinkSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerSpec:
+    """One peer's lifecycle: identity, behaviour over time, link."""
+
+    uid: str
+    behavior: str = "honest"
+    join_round: int = 0
+    leave_round: Optional[int] = None
+    rejoin_round: Optional[int] = None
+    # adversary schedule: at round r, switch to behaviour b (applied in
+    # order; composes the byzantine transforms over time — e.g. a
+    # turncoat is ("honest", [(5, "byz_norm")]))
+    behavior_schedule: Tuple[Tuple[int, str], ...] = ()
+    link: Optional[LinkSpec] = None
+    data_multiplier: int = 1
+    desync_rounds: int = 0
+    desync_start: int = 5
+    copy_victim: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidatorSpec:
+    """A staked validator; ``offline`` spans [start, end) in rounds."""
+
+    uid: str
+    stake: float = 1000.0
+    offline: Tuple[Tuple[int, int], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    rounds: int
+    peers: Tuple[PeerSpec, ...]
+    validators: Tuple[ValidatorSpec, ...] = (
+        ValidatorSpec(uid="validator-0"),)
+    default_link: LinkSpec = FAST_LINK
+    seed: int = 0
+    description: str = ""
+    # incentive sizing overrides; None = engine heuristics
+    top_g: Optional[int] = None
+    eval_set_size: Optional[int] = None
+
+
+# ------------------------------------------------------------- registry
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
+
+
+def register_scenario(fn: Callable[..., Scenario]):
+    SCENARIOS[fn.__name__] = fn
+    return fn
+
+
+def get_scenario(name: str, rounds: Optional[int] = None,
+                 seed: int = 0) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    kw = {"seed": seed}
+    if rounds:
+        kw["rounds"] = rounds
+    return SCENARIOS[name](**kw)
+
+
+# ------------------------------------------------------- named scenarios
+
+
+@register_scenario
+def churn_storm(rounds: int = 16, seed: int = 0) -> Scenario:
+    """Heavy peer churn: a stable honest core plus transient peers that
+    join and leave throughout (some rejoin), and one lazy free-rider. The
+    incentive layer must keep paying the core while newcomers bootstrap
+    from the checkpoint and leavers' buckets vanish mid-round."""
+    core = tuple(PeerSpec(uid=f"core-{i}") for i in range(4))
+    q = max(rounds // 4, 1)
+    transients = (
+        PeerSpec(uid="drift-0", leave_round=2 * q),
+        PeerSpec(uid="drift-1", join_round=q, leave_round=3 * q),
+        PeerSpec(uid="drift-2", join_round=q, leave_round=2 * q,
+                 rejoin_round=3 * q),
+        PeerSpec(uid="drift-3", join_round=2 * q),
+        PeerSpec(uid="drift-4", join_round=3 * q),
+    )
+    return Scenario(
+        name="churn_storm", rounds=rounds, seed=seed,
+        peers=core + transients + (PeerSpec(uid="slacker",
+                                            behavior="lazy"),),
+        default_link=LinkSpec(latency_rounds=0.05, jitter_rounds=0.1),
+        description="stable honest core under joins/leaves/rejoins; "
+                    "one lazy free-rider")
+
+
+@register_scenario
+def byzantine_wave(rounds: int = 12, seed: int = 0) -> Scenario:
+    """Adversary schedule composing the §4 attacks over time: three
+    turncoats contribute honestly, then flip to norm-attack, noise and
+    laziness in staggered waves; one peer is noisy from the start. The
+    Gauntlet must claw back their incentive after each flip."""
+    honest = tuple(PeerSpec(uid=f"honest-{i}") for i in range(6))
+    w = max(rounds // 4, 1)
+    adversaries = (
+        PeerSpec(uid="turncoat-norm",
+                 behavior_schedule=((w, "byz_norm"),)),
+        PeerSpec(uid="turncoat-noise",
+                 behavior_schedule=((2 * w, "byz_noise"),)),
+        PeerSpec(uid="turncoat-lazy",
+                 behavior_schedule=((3 * w, "lazy"),)),
+        PeerSpec(uid="born-noisy", behavior="byz_noise"),
+    )
+    return Scenario(
+        name="byzantine_wave", rounds=rounds, seed=seed,
+        peers=honest + adversaries,
+        description="honest-then-turncoat waves (norm/noise/lazy) plus a "
+                    "from-birth noise attacker")
+
+
+@register_scenario
+def validator_failover(rounds: int = 12, seed: int = 0) -> Scenario:
+    """Three staked validators; the top-staked one (the checkpoint
+    pointer) goes dark mid-run. Consensus must keep resolving from the
+    survivors' posts, the pointer must fail over, and the returning
+    validator must resync from the new checkpoint."""
+    third = max(rounds // 3, 1)
+    return Scenario(
+        name="validator_failover", rounds=rounds, seed=seed,
+        peers=tuple(PeerSpec(uid=f"honest-{i}") for i in range(5))
+        + (PeerSpec(uid="slacker", behavior="lazy"),
+           PeerSpec(uid="tardy", behavior="late")),
+        validators=(
+            ValidatorSpec(uid="val-a", stake=1000.0,
+                          offline=((third, 2 * third),)),
+            ValidatorSpec(uid="val-b", stake=600.0),
+            ValidatorSpec(uid="val-c", stake=300.0),
+        ),
+        description="top-staked validator offline for the middle third; "
+                    "checkpoint pointer fails over and back")
+
+
+@register_scenario
+def flash_crowd(rounds: int = 12, seed: int = 0) -> Scenario:
+    """Three founders, then a crowd arrives at once on a bandwidth-
+    limited default link (uploads land spread across the window). One
+    crowd member free-rides and one copies a founder."""
+    burst = max(rounds // 3, 1)
+    crowd = tuple(
+        PeerSpec(uid=f"crowd-{i}", join_round=burst) for i in range(6))
+    return Scenario(
+        name="flash_crowd", rounds=rounds, seed=seed,
+        peers=tuple(PeerSpec(uid=f"founder-{i}") for i in range(3))
+        + crowd
+        + (PeerSpec(uid="crowd-lazy", behavior="lazy", join_round=burst),
+           PeerSpec(uid="crowd-mimic", behavior="copycat",
+                    copy_victim="founder-0", join_round=burst)),
+        default_link=LinkSpec(upload_rounds=0.3, jitter_rounds=0.3),
+        description="8-peer join burst on constrained links; founders "
+                    "must not be drowned out")
+
+
+@register_scenario
+def slow_links(rounds: int = 12, seed: int = 0) -> Scenario:
+    """Honest intent, heterogeneous infrastructure: a dial-up peer whose
+    upload cannot fit the window (emergently late every round), a
+    high-latency peer, a lossy link, and a lazy peer for contrast. Only
+    the network should punish the slow peers — never crash the round."""
+    return Scenario(
+        name="slow_links", rounds=rounds, seed=seed,
+        peers=tuple(PeerSpec(uid=f"fiber-{i}") for i in range(4)) + (
+            PeerSpec(uid="dialup",
+                     link=LinkSpec(upload_rounds=1.4)),
+            PeerSpec(uid="satellite",
+                     link=LinkSpec(latency_rounds=0.6, upload_rounds=0.3,
+                                   jitter_rounds=0.4)),
+            PeerSpec(uid="flaky",
+                     link=LinkSpec(drop_prob=0.35, upload_rounds=0.2)),
+            PeerSpec(uid="slacker", behavior="lazy"),
+        ),
+        default_link=LinkSpec(upload_rounds=0.1),
+        description="emergent lateness from bandwidth/latency/loss, no "
+                    "hard-coded 'late' behaviour")

@@ -1,0 +1,83 @@
+"""Per-round metrics for testnet scenarios, with deterministic JSON export.
+
+Everything the incentive layer is supposed to guarantee is recorded per
+round so a scenario's outcome is checkable from the artifact alone:
+honest share of consensus incentive, fast-filter pass rates, OpenSkill
+ordinal trajectories, proof-of-computation μ, validation loss, network
+counters, and every discrete event (join/leave/turncoat/failover).
+
+Export is ``json.dumps(..., sort_keys=True)`` over plain Python floats
+produced by a seeded simulation, so the same seed yields a byte-identical
+file — the determinism contract ``tests/test_sim.py`` pins down.
+``repro.launch.analysis.sim_telemetry_summary`` consumes the export.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+# behaviours whose incentive counts as "honest" when computing the honest
+# share of consensus weight (the paper's headline survival metric)
+HONEST_BEHAVIORS = frozenset({"honest", "more_data", "desync"})
+
+
+class Telemetry:
+    """Append-only round records + event log for one scenario run."""
+
+    def __init__(self, scenario: str, seed: int,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.scenario = scenario
+        self.seed = seed
+        self.meta = dict(meta or {})
+        self.rounds: List[Dict[str, Any]] = []
+        self.events: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------ record
+    def log_event(self, block: int, kind: str, detail: str) -> None:
+        self.events.append({"block": block, "kind": kind, "detail": detail})
+
+    def record_round(self, **fields) -> None:
+        self.rounds.append(fields)
+
+    # ----------------------------------------------------------- export
+    def summary(self) -> Dict[str, Any]:
+        if not self.rounds:
+            return {"rounds": 0}
+        last = self.rounds[-1]
+        losses = [r["val_loss"] for r in self.rounds
+                  if r.get("val_loss") is not None]
+        pass_rates = [rate for r in self.rounds
+                      for rate in r.get("fast_pass_rate", {}).values()]
+        return {
+            "rounds": len(self.rounds),
+            "final_honest_share": last.get("honest_share"),
+            "mean_honest_share": (
+                sum(r.get("honest_share", 0.0) for r in self.rounds)
+                / len(self.rounds)),
+            "mean_fast_pass_rate": (
+                sum(pass_rates) / len(pass_rates) if pass_rates else None),
+            "val_losses": losses,
+            "final_consensus": last.get("consensus", {}),
+            "events": len(self.events),
+        }
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"scenario": self.scenario, "seed": self.seed,
+                "meta": self.meta, "rounds": self.rounds,
+                "events": self.events, "summary": self.summary()}
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps(self.to_dict(), sort_keys=True, indent=2)
+        if path:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text
+
+    @staticmethod
+    def load(path: str) -> Dict[str, Any]:
+        with open(path) as f:
+            return json.load(f)

@@ -16,7 +16,7 @@ Behaviours model the paper's simulations (§6 Fig. 2) and threat model (§4):
 from __future__ import annotations
 
 import dataclasses
-import functools
+import weakref
 from typing import Callable, Dict, Optional
 
 import jax
@@ -41,6 +41,61 @@ class PeerConfig:
     copy_victim: Optional[str] = None
 
 
+# ---------------------------------------------------------------------
+# Shared jit caches (ROADMAP follow-up): N same-shape peers in a sim
+# previously compiled N identical local-step and aggregate programs —
+# one compile per PeerNode construction, which dominates wall time in
+# 50+ peer simulations and again on every churn join. Both hot entry
+# points are now cached per (tree structure, leaf shapes/dtypes, DeMo
+# chunk/k) so every same-shape peer shares one compiled program.
+#
+# The local-step cache is weak-keyed on grad_fn (shapes alone cannot
+# distinguish two models whose loss differs but whose param trees match),
+# so a sim's programs are reclaimed with its grad_fn instead of leaking
+# one compile per engine built in the process. The aggregate program is
+# shared fleet-wide via ``demo_opt.shared_aggregate_apply`` — validator
+# included, so every replica literally runs the same compiled callable.
+
+_LOCAL_JIT_CACHE: "weakref.WeakKeyDictionary[Callable, Dict[tuple, Callable]]" \
+    = weakref.WeakKeyDictionary()
+
+
+def shared_local_step(grad_fn: Callable, hp: TrainConfig, params,
+                      metas) -> Callable:
+    """One jitted DeMo local step per (grad_fn, tree structure, chunk, k).
+
+    ``metas`` is fully determined by the leaf shapes and ``hp.demo_chunk``,
+    so it rides along in the closure rather than the key.
+    """
+    key = (hp.demo_beta, hp.demo_chunk, hp.demo_topk,
+           *demo_opt.tree_signature(params))
+    per_grad = _LOCAL_JIT_CACHE.setdefault(grad_fn, {})
+    fn = per_grad.get(key)
+    if fn is None:
+        # the cached program must NOT strongly reference grad_fn (the
+        # weak key) or the entry becomes immortal; grad_fn is only needed
+        # at trace time, and tracing is unreachable once it is collected
+        grad_ref = weakref.ref(grad_fn)
+
+        def impl(params, state, batches):
+            """Accumulate grads over the round's micro-batches (more data
+            => more batches, like the live run's per-round token budget),
+            then one DeMo compress step."""
+            gf = grad_ref()
+            assert gf is not None, "grad_fn was garbage-collected"
+            grads = gf(params, batches[0])
+            for b in batches[1:]:
+                g2 = gf(params, b)
+                grads = jax.tree.map(lambda a, c: a + c, grads, g2)
+            n = float(len(batches))
+            grads = jax.tree.map(lambda g: g / n, grads)
+            return demo_opt.local_step(grads, state, beta=hp.demo_beta,
+                                       chunk=hp.demo_chunk,
+                                       k=hp.demo_topk, metas=metas)
+        fn = per_grad[key] = jax.jit(impl)
+    return fn
+
+
 class PeerNode:
     def __init__(self, pc: PeerConfig, params, metas, grad_fn: Callable,
                  hp: TrainConfig, chain: Chain, store: BucketStore,
@@ -59,29 +114,51 @@ class PeerNode:
                               if pc.behavior == "desync" else -1)
         read_key = store.create_bucket(pc.uid)
         chain.register_peer(pc.uid, read_key)
-        self._local = jax.jit(self._local_impl)
-        # same fused aggregate+apply the validator jits — every replica
-        # runs the same compiled program and stays bit-identical to θ^val
-        self._agg = jax.jit(functools.partial(demo_opt.aggregate_apply,
-                                              metas=self.metas))
+        # shared across every same-shape peer (one compile, not one per node)
+        self._local = shared_local_step(grad_fn, hp, params, metas)
+        self._agg = demo_opt.shared_aggregate_apply(params, metas,
+                                                    hp.demo_chunk)
 
-    def _local_impl(self, params, state, batches):
-        """Accumulate grads over the round's micro-batches (more data =>
-        more batches, like the live run's per-round token budget), then one
-        DeMo compress step."""
-        grads = self.grad_fn(params, batches[0])
-        for b in batches[1:]:
-            g2 = self.grad_fn(params, b)
-            grads = jax.tree.map(lambda a, c: a + c, grads, g2)
-        n = float(len(batches))
-        grads = jax.tree.map(lambda g: g / n, grads)
-        return demo_opt.local_step(grads, state, beta=self.hp.demo_beta,
-                                   chunk=self.hp.demo_chunk,
-                                   k=self.hp.demo_topk, metas=self.metas)
+    def set_behavior(self, behavior: str, at_round: int) -> None:
+        """Adversary-schedule hook: flip behaviour mid-run.
+
+        A flip to ``desync`` re-arms the pause window from ``at_round``
+        (the born-desync path computes it in ``__init__``): the peer goes
+        silent for ``desync_rounds`` rounds — indefinitely when the spec
+        left it 0 — then resumes on its stale replica."""
+        self.pc.behavior = behavior
+        if behavior == "desync":
+            self.pc.desync_start = at_round
+            self._paused_until = (at_round + self.pc.desync_rounds
+                                  if self.pc.desync_rounds > 0
+                                  else float("inf"))
 
     def _paused(self, round_idx: int) -> bool:
         return (self.pc.behavior == "desync"
                 and self.pc.desync_start <= round_idx < self._paused_until)
+
+    def _steal_payload(self, round_idx: int):
+        """Copycat: republish the victim's freshest readable payload.
+
+        Under a delayed network the victim's current-round upload may not
+        have landed when the copycat produces, so fall back to the
+        previous round's object — exactly what a live copier would see in
+        the victim's bucket. None if nothing is readable (victim churned
+        or never published)."""
+        try:
+            rk = self.chain.peers[self.pc.copy_victim].bucket_read_key
+        except KeyError:
+            return None
+        for rnd in (round_idx, round_idx - 1):
+            if rnd < 0:
+                break
+            try:
+                victim, _ = self.store.get_gradient(self.pc.copy_victim,
+                                                    rnd, rk)
+                return byzantine.copy_payload(victim)
+            except Exception:
+                continue
+        return None
 
     # ---------------------------------------------------------- produce
     def produce(self, round_idx: int) -> None:
@@ -89,13 +166,12 @@ class PeerNode:
         b = self.pc.behavior
         if b == "offline" or self._paused(round_idx):
             return
+        bucket = self.store.buckets.get(self.uid)
+        if bucket is None:
+            return       # churned: the bucket is gone, nowhere to publish
         if b == "copycat" and self.pc.copy_victim:
-            try:
-                rk = self.chain.peers[self.pc.copy_victim].bucket_read_key
-                victim, _ = self.store.get_gradient(self.pc.copy_victim,
-                                                    round_idx, rk)
-                payload = byzantine.copy_payload(victim)
-            except Exception:
+            payload = self._steal_payload(round_idx)
+            if payload is None:
                 return
         else:
             batch = self.data["assigned"](self.uid, round_idx)
@@ -120,14 +196,13 @@ class PeerNode:
                 self.store.put_gradient(self.uid, round_idx, payload, size)
         else:
             self.store.put_gradient(self.uid, round_idx, payload, size)
-        # sync sample (2 values/tensor, §3.2)
+        # sync sample (2 values/tensor, §3.2); objects are immutable per
+        # (round, key), so an already-present sample is left as is
         sample = S.sample_params_for_sync(self.params,
                                           jax.random.PRNGKey(round_idx))
-        try:
-            self.store.buckets[self.uid].put(f"sync/round-{round_idx:08d}",
-                                             sample, self.chain.block, 8)
-        except KeyError:
-            pass
+        sync_key = f"sync/round-{round_idx:08d}"
+        if bucket.head(sync_key) is None:
+            bucket.put(sync_key, sample, self.chain.block, 8)
 
     # ---------------------------------------------------------- consume
     def apply_round(self, round_idx: int, weights: Dict[str, float],

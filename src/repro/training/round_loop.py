@@ -2,10 +2,11 @@
 validator, one communication round at a time (the paper's full system at
 laptop scale; benchmarks and integration tests run through this).
 
-Each round drives the validator's composable stage pipeline explicitly
-(``build_context`` → ``run_stages`` → ``report``) so callers can observe
-or splice the per-stage state; ``Validator.run_round`` is the same thing
-in one call."""
+``run_rounds`` is now a compatibility wrapper over the discrete-event
+engine in ``repro.sim`` — same lock-step semantics for the single-
+validator/perfect-network case, while scenarios (churn, latency,
+adversary schedules, multi-validator consensus) run through
+``SimEngine.from_scenario`` directly."""
 from __future__ import annotations
 
 import dataclasses
@@ -80,23 +81,23 @@ def run_rounds(validator: Validator, peers: Dict[str, PeerNode],
                eval_every: int = 5,
                eval_batch_fn: Optional[Callable] = None,
                fast_set_size: Optional[int] = None) -> SimResult:
-    reports, val_losses = [], []
-    for rnd in range(num_rounds):
-        # --- peers publish within the put window
-        for peer in peers.values():
-            peer.produce(rnd)
-        chain.advance(chain.blocks_per_round)  # window closes
-        # --- validator evaluates + aggregates (stage pipeline)
-        ctx = validator.build_context(rnd, list(peers.keys()),
-                                      fast_set_size=fast_set_size)
-        rep = validator.run_stages(ctx).report()
-        # --- coordinated aggregation on every peer
-        for peer in peers.values():
-            peer.apply_round(rnd, rep.weights, rep.lr)
-        if eval_batch_fn is not None and rnd % eval_every == 0:
-            b = eval_batch_fn(rnd)
-            rep.train_loss = float(validator.eval_loss(validator.params, b))
-            val_losses.append(rep.train_loss)
-        reports.append(rep)
-    return SimResult(reports=reports, val_losses=val_losses,
+    """Thin compatibility wrapper over :class:`repro.sim.SimEngine`.
+
+    One validator, a perfect network and no churn — the engine degenerates
+    to the original lock-step loop (peers publish at the round-start
+    block, the window elapses, the validator pipeline runs, every peer
+    applies the published aggregation), so existing callers and tests see
+    identical semantics while scenarios get the full event machinery.
+    """
+    from repro.sim.engine import SimEngine
+    from repro.sim.telemetry import Telemetry
+
+    engine = SimEngine(chain, validator.store, [validator], peers,
+                       telemetry=Telemetry("run_rounds",
+                                           validator.hp.seed),
+                       fast_set_size=fast_set_size,
+                       eval_every=eval_every, eval_batch_fn=eval_batch_fn)
+    engine.run(num_rounds)
+    return SimResult(reports=engine.reports[validator.uid],
+                     val_losses=engine.val_losses,
                      validator=validator, peers=peers)

@@ -32,6 +32,29 @@ def test_put_window_rejects_missing():
     assert not store.within_put_window("peer-a", 0, 10)
 
 
+def test_put_window_false_for_missing_bucket():
+    """A churned/deregistered peer (bucket gone) is 'no payload', not a
+    KeyError — the round must keep scoring everyone else."""
+    chain, store, rk = _setup()
+    assert not store.within_put_window("never-registered", 0, 10)
+    store.put_gradient("peer-a", 0, {"x": 1}, 10)
+    store.remove_bucket("peer-a")
+    assert not store.within_put_window("peer-a", 0, 10)
+    store.remove_bucket("peer-a")         # idempotent
+
+
+def test_eligible_contributors_skip_churned_peer():
+    from repro.core.gauntlet import eligible_contributors
+    chain, store, rk = _setup()
+    rk_b = store.create_bucket("peer-b")
+    chain.register_peer("peer-b", rk_b)
+    store.put_gradient("peer-a", 0, {"x": 1}, 10)
+    store.put_gradient("peer-b", 0, {"x": 2}, 10)
+    store.remove_bucket("peer-b")         # churned after publishing
+    weights = {"peer-a": 0.5, "peer-b": 0.5}
+    assert eligible_contributors(weights, store, chain, 0) == ["peer-a"]
+
+
 def test_objects_immutable():
     chain, store, rk = _setup()
     store.put_gradient("peer-a", 0, {"x": 1}, 10)
@@ -72,3 +95,85 @@ def test_checkpoint_pointer_is_top_staked():
     chain.register_validator("small", stake=10.0)
     chain.register_validator("big", stake=1000.0)
     assert chain.checkpoint_pointer == "big"
+
+
+def test_checkpoint_pointer_failover():
+    chain = Chain()
+    chain.register_validator("a", stake=1000.0)
+    chain.register_validator("b", stake=100.0)
+    chain.set_checkpoint_pointer("b")      # engine fails over
+    assert chain.checkpoint_pointer == "b"
+    with pytest.raises(AssertionError):
+        chain.set_checkpoint_pointer("not-staked")
+
+
+# ---- consensus_weights edge cases (multi-validator incentive layer) ----
+
+
+def test_consensus_single_validator_is_identity():
+    chain = Chain()
+    chain.register_validator("v1", stake=10.0)
+    chain.post_weights("v1", {"a": 0.75, "b": 0.25})
+    w = chain.consensus_weights()
+    assert abs(w["a"] - 0.75) < 1e-9 and abs(w["b"] - 0.25) < 1e-9
+
+
+def test_consensus_disjoint_peer_sets_follow_stake_majority():
+    """Peers endorsed only by a minority of stake get zero; the majority
+    validator's slate survives and renormalizes."""
+    chain = Chain()
+    chain.register_validator("v1", stake=300.0)
+    chain.register_validator("v2", stake=200.0)
+    chain.post_weights("v1", {"a": 0.5, "b": 0.5})
+    chain.post_weights("v2", {"c": 1.0})
+    w = chain.consensus_weights()
+    assert abs(w["a"] - 0.5) < 1e-9 and abs(w["b"] - 0.5) < 1e-9
+    assert w["c"] == 0.0
+
+
+def test_consensus_disjoint_equal_stake_no_majority():
+    """With a 50/50 stake split over disjoint slates no peer reaches
+    majority support — consensus is all-zero (and must not divide by 0)."""
+    chain = Chain()
+    chain.register_validator("v1", stake=100.0)
+    chain.register_validator("v2", stake=100.0)
+    chain.post_weights("v1", {"a": 1.0})
+    chain.post_weights("v2", {"b": 1.0})
+    w = chain.consensus_weights()
+    assert set(w) == {"a", "b"} and all(v == 0.0 for v in w.values())
+
+
+def test_consensus_zero_weight_posts_are_safe():
+    chain = Chain()
+    chain.register_validator("v1", stake=10.0)
+    chain.register_validator("v2", stake=10.0)
+    chain.post_weights("v1", {"a": 0.0, "b": 0.0})
+    chain.post_weights("v2", {"a": 0.0, "b": 0.0})
+    w = chain.consensus_weights()
+    assert all(v == 0.0 for v in w.values())
+
+
+def test_consensus_stake_majority_outvotes_dishonest_minority():
+    """One honest validator with 60% of stake defeats two colluding
+    validators shilling a zero-work peer."""
+    chain = Chain()
+    chain.register_validator("hon", stake=600.0)
+    chain.register_validator("bad1", stake=150.0)
+    chain.register_validator("bad2", stake=150.0)
+    chain.post_weights("hon", {"good": 0.8, "shill": 0.2})
+    chain.post_weights("bad1", {"good": 0.0, "shill": 1.0})
+    chain.post_weights("bad2", {"good": 0.0, "shill": 1.0})
+    w = chain.consensus_weights()
+    assert abs(w["good"] - 0.8) < 1e-9 and abs(w["shill"] - 0.2) < 1e-9
+
+
+def test_withdraw_weights_removes_validator_from_consensus():
+    chain = Chain()
+    chain.register_validator("v1", stake=100.0)
+    chain.register_validator("v2", stake=10.0)
+    chain.post_weights("v1", {"a": 1.0})
+    chain.post_weights("v2", {"b": 1.0})
+    chain.withdraw_weights("v1")          # v1 went offline; prune it
+    w = chain.consensus_weights()
+    assert abs(w["b"] - 1.0) < 1e-9 and w.get("a", 0.0) == 0.0
+    chain.withdraw_weights("never-posted")  # idempotent

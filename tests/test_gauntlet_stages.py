@@ -78,7 +78,8 @@ def test_compiled_calls_constant_in_peer_count():
         rep = validator.run_round(0, list(peers.keys()))
         assert len(rep.evaluated) == n
         counts[n] = validator.compiled_calls
-    assert counts[3] == counts[6] == 2   # primary-eval + aggregate
+    # sync-scores + baselines + primary-eval + aggregate
+    assert counts[3] == counts[6] == 4
 
 
 def test_aggregate_reuses_stacked_rows():
@@ -157,6 +158,24 @@ def test_shared_baseline_is_cached_across_peers():
           "labels": jnp.ones((2, 8), jnp.int32)}
     other = {"tokens": jnp.zeros((2, 8), jnp.int32),
              "labels": jnp.zeros((2, 8), jnp.int32)}
-    uniq, idx = G._unique_batches([b, b2, other])
+    uniq, idx, keys = G._unique_batches([b, b2, other])
     assert len(uniq) == 2
+    assert len(keys) == 2 and keys[0] != keys[1]
     np.testing.assert_array_equal(idx, [0, 0, 1])
+
+
+def test_baseline_cache_dedupes_across_validators():
+    """A second validator sharing a BaselineCache with the checkpoint
+    pointer must issue ZERO baseline compiled calls (ROADMAP dedupe)."""
+    from repro.core.gauntlet import BaselineCache
+    cache = BaselineCache()
+    b = {"tokens": jnp.ones((2, 8), jnp.int32),
+         "labels": jnp.ones((2, 8), jnp.int32)}
+    keys = [b"k1", b"k2"]
+    assert cache.lookup(0, keys) is None          # cold
+    cache.publish(0, keys, [1.5, 2.5])
+    assert cache.lookup(0, keys) == [1.5, 2.5]    # hit
+    assert cache.lookup(1, keys) is None          # wrong step
+    cache.publish(1, [b"k1"], [3.0])              # step rolls the store
+    assert cache.lookup(1, [b"k2"]) is None
+    assert cache.hits == 1 and cache.misses == 3
