@@ -7,10 +7,11 @@ primary-eval → scoreboard → aggregate) at 8/16/32/64 peers and reports
   * compiled-call dispatches per round (``Validator.compiled_calls``)
 
 The batched stages issue O(1) compiled calls per round — sync-scores,
-baselines, primary scores, aggregate: 4 — where the per-peer loop
-implementation issued 4·|S_t| (+1 aggregate), so steady-state round
-latency should grow sub-linearly in the peer count while the dispatch
-count stays flat.
+audit fingerprint, baselines, primary scores, aggregate: 5 (this bench
+builds the validator without a grad_fn, so replay audits are inactive) —
+where the per-peer loop implementation issued 4·|S_t| (+1 aggregate), so
+steady-state round latency should grow sub-linearly in the peer count
+while the dispatch count stays flat.
 
 Peers are simulated by publishing format-valid random payloads through a
 single shared jitted compressor (real PeerNodes would add one local-step

@@ -85,6 +85,12 @@ def main():
           f"(min over rounds {summary['min_honest_share']:.3f}; "
           f"majority every round: "
           f"{summary['honest_majority_all_rounds']})")
+    if summary.get("audit_flagged_peers"):
+        print(f"audit flagged {summary['audit_flags']} verdicts on "
+              f"{summary['audit_flagged_peers']} "
+              f"({', '.join(summary.get('audit_flag_reasons', []))}); "
+              f"their final incentive share: "
+              f"{summary['audit_flagged_final_share']:.3f}")
     last = telemetry.rounds[-1]
     print("\nfinal consensus incentive (stake-weighted median):")
     for uid, w in sorted(last["consensus"].items(), key=lambda kv: -kv[1]):

@@ -1,0 +1,43 @@
+"""Proof-of-unique-work audit subsystem (paper §3.1 "unique computations").
+
+The paper's abstract promises a mechanism that ensures peers perform
+*unique* computations; without one, a copycat peer earns full incentive
+by republishing a victim's pseudo-gradient (`core.byzantine.copy_payload`
+is the attack). This package is the defense, three layers deep, wired
+into the validator round as ``Validator.stage_uniqueness``:
+
+``assignment``
+    Deterministic per-(round, uid) data-page assignments derived from the
+    chain block hash, plus commit-then-reveal digests of the consumed
+    batch posted through the ``Chain`` commitment bulletin — a peer's
+    claimed computation is bound to data only it was assigned.
+
+``fingerprint``
+    Count-sketch random projections of the *compressed* payloads (no
+    dense deltas are ever materialized) and one jitted pairwise-cosine
+    call over the eval set — verbatim, delayed and noise-masked copies
+    all collapse into high-similarity clusters.
+
+``replay``
+    The validator spot-checks sampled peers by recomputing their local
+    step from the assigned seed/pages (the same shared jitted program the
+    peers run) and comparing against the submitted payload within
+    tolerance; replay also arbitrates similarity clusters — the one
+    member whose payload matches its own replay is the original, the
+    rest are copies.
+
+Verdicts zero the flagged peer's round score and demote its OpenSkill
+rating; ``benchmarks/audit_bench.py`` proves the economics (copies earn
+~0 consensus incentive, honest payouts unchanged).
+"""
+from repro.audit.assignment import (assigned_pages, batch_digest,
+                                    chain_assigned_batch, chain_data_fns)
+from repro.audit.fingerprint import (cosine, cosine_matrix,
+                                     similarity_clusters, sketch_stacked)
+from repro.audit.replay import ReplayAuditor
+
+__all__ = [
+    "assigned_pages", "batch_digest", "chain_assigned_batch",
+    "chain_data_fns", "cosine", "cosine_matrix", "similarity_clusters",
+    "sketch_stacked", "ReplayAuditor",
+]

@@ -1,0 +1,94 @@
+"""Chain-committed data assignments + commit-then-reveal batch digests.
+
+The paper's ``SelectData(seed, p, t)`` binds every peer to a unique data
+subset per round; this module strengthens that binding so it is
+*auditable*:
+
+* the per-(round, uid) page assignment is derived from the **chain block
+  hash** at the round-start block (``Chain.block_hash``), so neither the
+  peer nor the validator can grind assignments — both derive the same
+  pages independently, and the assignment is only known once the block
+  exists;
+* the peer posts a **commit digest** of the batch it actually consumed
+  (``Chain.commit_batch``) before the validator evaluates. The "reveal"
+  is implicit: the validator recomputes the assigned batch from the
+  chain and checks the digest. A peer that trained on other data (or on
+  nothing) either commits a mismatching digest or forges the digest and
+  is caught downstream by replay (``repro.audit.replay``).
+
+Pure functions only — no repro imports besides the data pipeline, so the
+chain, gauntlet and peer layers can all use it without cycles.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.data import pipeline
+
+
+def _blake(*parts: bytes, digest_size: int = 16) -> bytes:
+    h = hashlib.blake2b(digest_size=digest_size)
+    for p in parts:
+        h.update(p)
+    return h.digest()
+
+
+def batch_digest(batch) -> bytes:
+    """Content digest of a data-batch pytree (the commitment payload).
+
+    Deterministic in leaf order and content; identical to the baseline-
+    cache key construction in ``core.gauntlet`` (which delegates here).
+    """
+    import jax
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in jax.tree.leaves(batch):
+        h.update(np.asarray(leaf).tobytes())
+    return h.digest()
+
+
+def assigned_pages(block_hash: bytes, uid: str, round_idx: int,
+                   num_pages: int, batch: int) -> np.ndarray:
+    """The peer's unique page ids for one round.
+
+    Same hash-partitioned construction as ``pipeline.select_data``
+    (``pipeline.slice_pages`` — each peer draws from its own slice of
+    the page space, so assignments stay disjoint across peers) but the
+    draw is seeded from the chain block hash instead of a static seed —
+    the assignment cannot be precomputed before the round's block exists.
+    """
+    material = _blake(block_hash, uid.encode(),
+                      int(round_idx).to_bytes(8, "little"))
+    rng = np.random.RandomState(int.from_bytes(material[:4], "little"))
+    base = int.from_bytes(_blake(b"slice", uid.encode())[:4],
+                          "little") % num_pages
+    return pipeline.slice_pages(rng, base, num_pages, batch)
+
+
+def chain_assigned_batch(corpus: pipeline.MarkovCorpus, chain, uid: str,
+                         round_idx: int, batch: int, seq_len: int) -> Dict:
+    """``SelectData`` keyed to the chain: both the peer and every
+    validator derive the identical batch from the round-start block hash."""
+    bh = chain.block_hash(round_idx * chain.blocks_per_round)
+    pages = assigned_pages(bh, uid, round_idx, corpus.num_pages, batch)
+    return corpus.batch_from_pages(pages, seq_len)
+
+
+def chain_data_fns(corpus: pipeline.MarkovCorpus, chain, seed: int,
+                   batch: int, seq_len: int,
+                   eval_batch: Optional[int] = None
+                   ) -> Dict[str, Callable]:
+    """The ``data_fns`` dict the validator and peers share, with the
+    assigned subset derived from the chain block hash (auditable) and the
+    random subset drawn exactly as before."""
+    def assigned(peer: str, rnd: int) -> Dict:
+        return chain_assigned_batch(corpus, chain, peer, rnd, batch,
+                                    seq_len)
+
+    def unassigned(peer: str, rnd: int) -> Dict:
+        return pipeline.unassigned_data(corpus, seed, peer, rnd,
+                                        eval_batch or batch, seq_len)
+
+    return {"assigned": assigned, "unassigned": unassigned}

@@ -1,0 +1,114 @@
+"""Payload fingerprints: count-sketch projections of compressed payloads
+and pairwise-similarity policing of the eval set.
+
+A peer's payload is already a sparse object — per tensor, ``(num_chunks,
+k)`` kept DCT coefficients plus their positions — so copies can be
+detected **without ever materializing the dense params-sized deltas**: a
+count-sketch (hash each coefficient's (chunk, position) to one of ``dim``
+slots with a pseudo-random sign, scatter-add the values) preserves inner
+products in expectation, and cosine similarity between sketches
+approximates cosine similarity between the underlying coefficient
+vectors with O(1/√dim) error. Verbatim copies sketch identically
+(cosine 1), noise-masked copies land within the noise floor of 1, and
+independent honest gradients stay far below the flag threshold.
+
+Everything here is trace-friendly: the validator jits one call that
+sketches the whole stacked eval set and compares it against itself and
+against the previous round's sketches (delayed-copy detection) — O(1)
+compiled calls per round, no per-peer dispatches. The sketch hash is
+seeded per run (from the chain genesis hash), not per round, so sketches
+stay comparable across rounds.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.demo.compress import Payload
+
+
+def _is_payload(x) -> bool:
+    return isinstance(x, Payload)
+
+
+def _mix_u32(x: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Murmur3-style finalizer over uint32 — cheap, well-mixed, traceable."""
+    x = x.astype(jnp.uint32) ^ jnp.uint32(salt & 0xFFFFFFFF)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def sketch_stacked(stacked, dim: int, seed: int) -> jnp.ndarray:
+    """(K, dim) count-sketch of each peer in a stacked payload tree.
+
+    Each kept coefficient at (leaf, chunk c, position idx) contributes
+    ``±vals`` to one of ``dim`` accumulator slots; slot and sign both
+    come from one hash of (leaf, c, idx, seed). Two payloads sharing
+    their coefficients (a copy) share their sketch; independent payloads
+    decorrelate. Memory is O(K · num_chunks · k) — the payload itself.
+    """
+    leaves = jax.tree.leaves(stacked, is_leaf=_is_payload)
+    k_peers = leaves[0].vals.shape[0]
+    out = jnp.zeros((k_peers, dim), jnp.float32)
+    for li, p in enumerate(leaves):
+        nc = p.idx.shape[1]
+        cid = jnp.arange(nc, dtype=jnp.uint32)[None, :, None]
+        h = _mix_u32(p.idx.astype(jnp.uint32) * jnp.uint32(2654435761)
+                     + cid * jnp.uint32(40503)
+                     + jnp.uint32((li * 97 + 1) & 0xFFFFFFFF), seed)
+        slot = (h % jnp.uint32(dim)).astype(jnp.int32)
+        sign = jnp.where((h >> 16) & 1, 1.0, -1.0).astype(jnp.float32)
+        rows = jnp.broadcast_to(
+            jnp.arange(k_peers, dtype=jnp.int32)[:, None, None], slot.shape)
+        out = out.at[rows, slot].add(p.vals.astype(jnp.float32) * sign)
+    return out
+
+
+def cosine_matrix(a: jnp.ndarray, b: jnp.ndarray,
+                  eps: float = 1e-12) -> jnp.ndarray:
+    """(Ka, Kb) cosine similarities between two sketch stacks. Zero rows
+    (padding) come out as 0 similarity, never NaN."""
+    an = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + eps)
+    bn = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + eps)
+    return an @ bn.T
+
+
+def cosine(a, b, eps: float = 1e-12) -> float:
+    """Host-side scalar cosine between two sketch vectors."""
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(a @ b / ((np.linalg.norm(a) + eps)
+                          * (np.linalg.norm(b) + eps)))
+
+
+def similarity_clusters(sim: np.ndarray, uids: Sequence[str],
+                        threshold: float) -> List[List[str]]:
+    """Union-find over pairs with similarity ≥ threshold.
+
+    Returns clusters of ≥ 2 uids (sorted, deterministic order) —
+    copycat rings and sybil mirrors show up as one cluster containing
+    the victim/operator plus every copy.
+    """
+    n = len(uids)
+    parent = list(range(n))
+
+    def find(i: int) -> int:
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    for i in range(n):
+        for j in range(i + 1, n):
+            if sim[i, j] >= threshold:
+                ri, rj = find(i), find(j)
+                if ri != rj:
+                    parent[rj] = ri
+    groups = {}
+    for i in range(n):
+        groups.setdefault(find(i), []).append(uids[i])
+    return sorted([sorted(g) for g in groups.values() if len(g) > 1])

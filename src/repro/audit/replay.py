@@ -1,0 +1,60 @@
+"""Replay audits: recompute a peer's local step from its chain-derived
+assignment and compare against what it submitted.
+
+The validator cannot see a peer's error-feedback buffer, so replay does
+not demand bit equality: it recomputes the *gradient part* of the local
+step — the same shared jitted DeMo program the peers run
+(``repro.training.peer.shared_local_step``), from the replica params and
+the peer's assigned batch, with a fresh (zero) error-feedback state —
+and compares count-sketch fingerprints within tolerance. An honest
+payload is the gradient plus a bounded error-feedback residual, so its
+similarity to the replay stays high; a copied payload is some *other*
+peer's gradient on *other* data and decorrelates.
+
+The verdict metric is the self-normalizing **decoy margin**
+``cos(payload, replay(assigned)) − cos(payload, replay(unassigned))``:
+both terms decay together as error feedback accumulates, but only a
+peer that actually trained on its assignment keeps a positive gap
+(``hp.audit_replay_margin``). Three uses in
+``Validator.stage_uniqueness``:
+
+* **spot checks** — k randomly sampled eval-set peers per round; a
+  margin below ``hp.audit_replay_margin`` zeroes the round score and
+  demotes the OpenSkill rating;
+* **cluster arbitration** — inside a fingerprint-similarity cluster the
+  member with the best margin is the original; everyone else is a copy.
+  The copies need no absolute threshold, so verbatim and noise-masked
+  copycats are flagged with zero false positives on their victims;
+* **delayed-suspect arbitration** — a cross-round fingerprint match is
+  only a suspicion (pseudo-gradients can be temporally correlated); the
+  margin decides, so an honest victim whose past payload was
+  republished under another uid survives.
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+from repro.demo import optimizer as demo_opt
+
+
+class ReplayAuditor:
+    """Recomputes local steps with the peers' own shared jitted program.
+
+    Constructed by the validator when it has the training ``grad_fn``;
+    the underlying compiled program is the SAME cache entry the peers
+    use (keyed on grad_fn + tree signature in ``training.peer``), so an
+    audit adds zero extra compiles to a same-shape fleet.
+    """
+
+    def __init__(self, grad_fn: Callable, hp, params, metas):
+        # lazy import: training.peer imports core.gauntlet, which imports
+        # this module — binding at call-set-up time breaks the cycle
+        from repro.training.peer import shared_local_step
+        self._local = shared_local_step(grad_fn, hp, params, metas)
+
+    def replay(self, params, batches: List):
+        """One recomputed payload from (replica params, assigned batches);
+        zero error-feedback state — the auditable part of the step."""
+        payload, _ = self._local(params, demo_opt.init_state(params),
+                                 batches)
+        return payload

@@ -7,12 +7,20 @@ height as a consistent global clock for put-window enforcement (paper §3.2,
 counter advanced by the round loop, per-peer registration with read-key
 commitments, validator stake, and an incentive bulletin combined across
 validators by stake weight (Yuma-consensus-lite: stake-weighted median).
+
+Proof-of-unique-work additions (``repro.audit``): deterministic **block
+hashes** seed the per-(round, uid) data assignments — an assignment is
+only derivable once its block exists, so work cannot be precomputed or
+ground — and a **batch-commitment bulletin** stores each peer's
+commit-then-reveal digest of the data it consumed (first write per
+(peer, round) wins, like any chain extrinsic).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Dict, List, Optional
+import hashlib
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -33,13 +41,29 @@ class ValidatorRecord:
 class Chain:
     """Single source of truth for time, identity and posted weights."""
 
-    def __init__(self, blocks_per_round: int = 10):
+    def __init__(self, blocks_per_round: int = 10, genesis_seed: int = 0):
         self._block = 0
         self.blocks_per_round = blocks_per_round
         self.peers: Dict[str, PeerRecord] = {}
         self.validators: Dict[str, ValidatorRecord] = {}
         self._weights: Dict[str, Dict[str, float]] = {}   # validator -> peer -> w
         self.checkpoint_pointer: Optional[str] = None      # highest-staked val
+        self._genesis = hashlib.blake2b(
+            f"genesis:{genesis_seed}".encode(), digest_size=16).digest()
+        self._commitments: Dict[Tuple[str, int], bytes] = {}
+
+    # ---- block hashes (assignment entropy) -------------------------
+    def block_hash(self, block: Optional[int] = None) -> bytes:
+        """Deterministic hash of a block — the entropy source for
+        chain-derived data assignments (``repro.audit.assignment``). A
+        pure function of (genesis, height) in this stub; the live chain
+        supplies real block hashes with the same unpredictability
+        property (unknown until the block is produced)."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(self._genesis)
+        h.update(int(block if block is not None else self._block)
+                 .to_bytes(8, "little", signed=True))
+        return h.digest()
 
     # ---- clock -----------------------------------------------------
     @property
@@ -91,6 +115,21 @@ class Chain:
         goes offline; newcomers and recovering validators sync from it)."""
         assert uid in self.validators, uid
         self.checkpoint_pointer = uid
+
+    # ---- batch commitments (commit-then-reveal, repro.audit) -------
+    def commit_batch(self, peer_uid: str, round_idx: int,
+                     digest: bytes) -> None:
+        """Post the digest of the batch a peer consumed this round.
+
+        First write per (peer, round) wins — commitments are immutable,
+        so a peer cannot retro-fit its claim after seeing the validator's
+        expectations. Unregistered peers cannot commit."""
+        assert peer_uid in self.peers, "must register to commit"
+        self._commitments.setdefault((peer_uid, round_idx), bytes(digest))
+
+    def batch_commitment(self, peer_uid: str,
+                         round_idx: int) -> Optional[bytes]:
+        return self._commitments.get((peer_uid, round_idx))
 
     # ---- incentive bulletin ----------------------------------------
     def post_weights(self, validator_uid: str,

@@ -215,6 +215,17 @@ class TrainConfig:
     openskill_kappa: float = 1e-4
     put_window: float = 60.0            # seconds (bucket-time units)
     tokens_per_peer: int = 400_000      # baseline script target
+    # proof-of-unique-work audit (repro.audit, Validator.stage_uniqueness)
+    audit_enabled: bool = True          # run the uniqueness stage
+    audit_fingerprint_dim: int = 256    # count-sketch width
+    audit_similarity_threshold: float = 0.9   # pairwise cosine => cluster
+    # replay verdicts are self-normalizing: cos(payload, replay(assigned))
+    # minus cos(payload, replay(decoy)) must clear this margin — honest
+    # peers hold a wide positive gap even as error feedback accumulates
+    audit_replay_margin: float = 0.02
+    audit_spot_k: int = 2               # random replay audits per round
+    audit_ban_rounds: int = 3           # rounds a flagged peer stays zeroed
+    audit_require_commit: bool = False  # flag peers with NO commitment too
 
 
 @dataclass(frozen=True)

@@ -36,3 +36,30 @@ def copy_payload(victim_payload_tree):
     return jax.tree.map(lambda p: Payload(vals=p.vals, idx=p.idx),
                         victim_payload_tree,
                         is_leaf=lambda x: isinstance(x, Payload))
+
+
+def delayed_copy(victim_prev_payload_tree):
+    """Copy a victim's *previous-round* payload: evades any same-round
+    equality check (nothing in the current round matches it), but the
+    audit layer's cross-round fingerprint comparison catches it
+    (`repro.audit.fingerprint`)."""
+    return copy_payload(victim_prev_payload_tree)
+
+
+def noise_mask_copy(victim_payload_tree, key, rel_sigma: float = 0.05):
+    """Copy + small additive noise on the kept coefficients (positions
+    unchanged): defeats verbatim-equality and digest-dedup checks while
+    retaining essentially all of the victim's information — the copy
+    still cosine-matches the original far above any honest cross-peer
+    similarity, which is exactly what the fingerprint audit flags."""
+    leaves, treedef = jax.tree.flatten(
+        victim_payload_tree, is_leaf=lambda x: isinstance(x, Payload))
+    out = []
+    for i, p in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        scale = rel_sigma * (jnp.std(p.vals.astype(jnp.float32)) + 1e-12)
+        noise = scale * jax.random.normal(k, p.vals.shape, jnp.float32)
+        out.append(Payload(vals=(p.vals.astype(jnp.float32)
+                                 + noise).astype(p.vals.dtype),
+                           idx=p.idx))
+    return jax.tree.unflatten(treedef, out)

@@ -13,6 +13,16 @@ through an explicit :class:`RoundContext` blackboard:
     jitted call over a (|F_t|, N) sample matrix — only the bucket reads
     and format checks remain host-side per peer.
 
+``uniqueness``
+    Proof-of-unique-work audit (``repro.audit``): chain-commitment
+    checks of the consumed-batch digests, one jitted count-sketch
+    fingerprint + pairwise-similarity call over the stacked eval set
+    (verbatim / delayed / noise-masked copy detection against this and
+    the previous round), and replay audits — spot checks of k sampled
+    peers plus arbitration inside similarity clusters, recomputing local
+    steps with the peers' own shared jitted program. Flags zero the
+    round score (scoreboard stage) and demote the OpenSkill rating.
+
 ``primary-eval``
     Small set S_t: **batched** LossScore (eq. 2). The eval set's payloads
     are stacked once along a leading peer axis
@@ -44,10 +54,13 @@ through an explicit :class:`RoundContext` blackboard:
 :meth:`Validator.run_round` composes ``self.stages`` in order; callers may
 reorder, drop or substitute stages (benchmarks time individual stages,
 tests drive them one at a time). ``Validator.compiled_calls`` counts
-invocations of the batched jit entry points — sync-scores, baselines,
-primary scores, aggregate: at most 4 per round regardless of |F_t| or
-|S_t|, which ``benchmarks/gauntlet_bench.py`` measures at 8→64 peers
-(baselines drop to 0 on a cache hit).
+invocations of the batched jit entry points — sync-scores, audit
+fingerprint, baselines, primary scores, aggregate (5), plus the
+replay-audit local steps, which are bounded by ``audit_spot_k`` and the
+copy-cluster size, never by |F_t| or |S_t|. The per-round dispatch count
+is therefore O(1) in the peer count, which
+``benchmarks/gauntlet_bench.py`` measures at 8→64 peers (baselines drop
+to 0 on a full cache hit, partial hits recompute only missing rows).
 
 The jitted entry points retrace when the eval-set / contributor-set sizes
 change; those sizes are bounded by ``eval_set_size`` / ``top_g`` and
@@ -56,13 +69,14 @@ stabilize after the first rounds.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.audit import assignment, fingerprint
+from repro.audit.replay import ReplayAuditor
 from repro.comms.bucket import BucketStore
 from repro.comms.chain import Chain
 from repro.configs.base import TrainConfig
@@ -71,6 +85,11 @@ from repro.core.openskill import RatingBook
 from repro.demo import compress, optimizer as demo_opt
 from repro.demo.compress import Payload
 from repro.demo.schedules import warmup_cosine
+
+
+# how many recent evaluated rounds of sketches the delayed-copy check
+# compares against (bridges rounds where the eval set came up empty)
+AUDIT_REF_ROUNDS = 2
 
 
 @dataclasses.dataclass
@@ -91,6 +110,9 @@ class RoundReport:
     weights: Dict[str, float]
     lr: float
     train_loss: Optional[float] = None
+    audit_flagged: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # uniqueness-stage diagnostics: similarity clusters + replay margins
+    audit_detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -108,10 +130,20 @@ class RoundContext:
     fast_set: List[str] = dataclasses.field(default_factory=list)
     fast_pass: Dict[str, bool] = dataclasses.field(default_factory=dict)
     payloads: Dict[str, Any] = dataclasses.field(default_factory=dict)
-    # primary-eval →
+    # uniqueness / primary-eval → (the eval set is selected by whichever
+    # of the two stages runs first; both share the stacked payloads)
     eval_set: List[str] = dataclasses.field(default_factory=list)
+    eval_selected: bool = False
     stacked_payloads: Any = None    # Payload tree, leading axis = eval order
     stacked_index: Dict[str, int] = dataclasses.field(default_factory=dict)
+    assigned_batches: Dict[str, Any] = dataclasses.field(
+        default_factory=dict)   # per-eval-peer SelectData cache
+    unassigned_batches: Dict[str, Any] = dataclasses.field(
+        default_factory=dict)   # per-eval-peer random-subset cache
+    # uniqueness →
+    audit_flagged: Dict[str, str] = dataclasses.field(
+        default_factory=dict)   # uid -> reason (this round's fresh flags)
+    audit: Dict[str, Any] = dataclasses.field(default_factory=dict)
     loss_scores_assigned: Dict[str, float] = dataclasses.field(
         default_factory=dict)
     loss_scores_rand: Dict[str, float] = dataclasses.field(
@@ -133,7 +165,9 @@ class RoundContext:
                                self.loss_scores_assigned),
                            norm_scores=dict(self.norm_scores),
                            weights=dict(self.weights), lr=self.lr,
-                           train_loss=self.train_loss)
+                           train_loss=self.train_loss,
+                           audit_flagged=dict(self.audit_flagged),
+                           audit_detail=dict(self.audit))
 
 
 def eligible_contributors(weights: Dict[str, float], store: BucketStore,
@@ -147,11 +181,10 @@ def eligible_contributors(weights: Dict[str, float], store: BucketStore,
 
 
 def _batch_key(batch) -> bytes:
-    """Content digest of a data batch — the baseline-loss cache key."""
-    h = hashlib.blake2b(digest_size=16)
-    for leaf in jax.tree.leaves(batch):
-        h.update(np.asarray(leaf).tobytes())
-    return h.digest()
+    """Content digest of a data batch — the baseline-loss cache key AND
+    the commit-then-reveal digest (one canonical construction, in
+    :func:`repro.audit.assignment.batch_digest`)."""
+    return assignment.batch_digest(batch)
 
 
 def _stack_batches(batches: List[Any]):
@@ -191,19 +224,21 @@ class BaselineCache:
     baseline compiled call entirely. Only the current step is retained —
     θ changes every aggregation, so older entries can never hit.
 
-    Lookup is all-or-nothing, so the dedup pays off when validators
-    evaluate the same peers — i.e. ``eval_set_size`` covers the in-window
-    candidates (the ``SimEngine.from_scenario`` default). With smaller,
-    independently-sampled eval sets the key sets differ and replicas fall
-    back to computing their own baselines (correct, just not deduped);
-    partial per-key reuse is a stated ROADMAP follow-up.
+    Lookup is per key: a replica whose eval set only partially overlaps
+    the pointer's reads the overlapping baselines and computes just the
+    missing ones (``stage_primary_eval`` slices the unique-batch stack
+    down to the misses — the ROADMAP partial-reuse follow-up). When the
+    key sets coincide (the ``SimEngine.from_scenario`` default, where
+    ``eval_set_size`` covers the in-window candidates) replicas issue
+    zero baseline compiled calls.
     """
 
     def __init__(self):
         self._step: Optional[int] = None
         self._vals: Dict[bytes, float] = {}
-        self.hits = 0
-        self.misses = 0
+        self.hits = 0          # lookups fully served from the cache
+        self.partial_hits = 0  # lookups that saved at least one key
+        self.misses = 0        # lookups that had to compute something
 
     def publish(self, step: int, keys: List[bytes], values) -> None:
         if step != self._step:
@@ -211,13 +246,27 @@ class BaselineCache:
         for k, v in zip(keys, values):
             self._vals[k] = float(v)
 
-    def lookup(self, step: int, keys: List[bytes]):
-        """All-or-nothing: per-key baselines for ``step``, else None."""
-        if step != self._step or any(k not in self._vals for k in keys):
+    def lookup_partial(self, step: int,
+                       keys: List[bytes]) -> Dict[bytes, float]:
+        """Per-key baselines for ``step``: whatever subset is known."""
+        if step != self._step:
             self.misses += 1
+            return {}
+        found = {k: self._vals[k] for k in keys if k in self._vals}
+        if len(found) == len(keys):
+            self.hits += 1
+        else:
+            self.misses += 1
+            if found:
+                self.partial_hits += 1
+        return found
+
+    def lookup(self, step: int, keys: List[bytes]):
+        """All-or-nothing view over :meth:`lookup_partial` (legacy API)."""
+        found = self.lookup_partial(step, keys)
+        if len(found) != len(keys):
             return None
-        self.hits += 1
-        return [self._vals[k] for k in keys]
+        return [found[k] for k in keys]
 
 
 class Validator:
@@ -227,7 +276,8 @@ class Validator:
                  hp: TrainConfig, chain: Chain, store: BucketStore,
                  data_fns: Dict[str, Callable], stake: float = 1000.0,
                  rng: Optional[np.random.RandomState] = None,
-                 baseline_cache: Optional[BaselineCache] = None):
+                 baseline_cache: Optional[BaselineCache] = None,
+                 grad_fn: Optional[Callable] = None):
         self.uid = uid
         self.params = params
         self.metas = metas
@@ -245,16 +295,36 @@ class Validator:
         self.current_top_g: List[str] = []
         self.compiled_calls = 0        # batched jit-entry invocations
         self.baseline_calls = 0        # baseline-loss invocations (cacheable)
+        self.baseline_rows = 0         # unique batches actually evaluated
         self.baseline_cache = baseline_cache
         self._last_fast_check: Dict[str, int] = {}
         chain.register_validator(uid, stake)
+        # ---- proof-of-unique-work audit state (repro.audit) ----
+        # replay audits need the training grad_fn; without it the stage
+        # still runs commitment + fingerprint checks and falls back to
+        # earliest-upload-wins inside similarity clusters
+        self._replayer = (ReplayAuditor(grad_fn, hp, params, metas)
+                          if grad_fn is not None else None)
+        self.audit_strikes: Dict[str, int] = {}   # uid -> rounds left zeroed
+        # rolling (uids, sketches) of the last AUDIT_REF_ROUNDS evaluated
+        # rounds — a window, not just round t-1, so a delayed copy still
+        # matches its victim across an empty-eval round in between
+        self._prev_sketches: List[tuple] = []
+        # sketch hash seeded from the chain genesis: fixed for the run so
+        # sketches stay comparable across rounds (delayed-copy detection)
+        self._sketch_seed = int.from_bytes(chain.block_hash(0)[:4], "little")
+        self._audit_rng = np.random.RandomState(
+            (hp.seed * 1_000_003 + self._sketch_seed) % (2 ** 31))
         # the composable round pipeline — callers may substitute stages
         self.stages: List[Callable[[RoundContext], RoundContext]] = [
-            self.stage_fast_filter, self.stage_primary_eval,
-            self.stage_scoreboard, self.stage_aggregate]
+            self.stage_fast_filter, self.stage_uniqueness,
+            self.stage_primary_eval, self.stage_scoreboard,
+            self.stage_aggregate]
         self._primary = jax.jit(self._primary_impl)
         self._baselines = jax.jit(self._baselines_impl)
         self._sync_scores = jax.jit(self._sync_scores_impl)
+        self._fingerprint = jax.jit(self._fingerprint_impl)
+        self._sketch = jax.jit(self._sketch_impl)
         # the SAME compiled aggregate program every peer replica uses —
         # bit-identity by construction, one compile per shape fleet-wide
         self._agg = demo_opt.shared_aggregate_apply(params, metas,
@@ -288,6 +358,21 @@ class Validator:
         s_r = S.batched_loss_scores(self.eval_loss, params, deltas,
                                     batches_r, beta, baseline=base_r[idx_r])
         return s_a, s_r
+
+    def _fingerprint_impl(self, stacked, ref):
+        """One compiled call for the whole uniqueness fingerprint: sketch
+        every eval-set payload, compare all pairs within the round AND
+        against the previous round's (padded) sketches — verbatim,
+        noise-masked and delayed copies all surface as high cosines."""
+        sk = fingerprint.sketch_stacked(
+            stacked, self.hp.audit_fingerprint_dim, self._sketch_seed)
+        return (sk, fingerprint.cosine_matrix(sk, sk),
+                fingerprint.cosine_matrix(sk, ref))
+
+    def _sketch_impl(self, stacked):
+        """Sketches alone (replayed payloads get compared host-side)."""
+        return fingerprint.sketch_stacked(
+            stacked, self.hp.audit_fingerprint_dim, self._sketch_seed)
 
     @staticmethod
     def _sync_scores_impl(ref, samples, alpha):
@@ -470,8 +555,176 @@ class Validator:
         ctx.fast_set = fast_set
         return ctx
 
-    def stage_primary_eval(self, ctx: RoundContext) -> RoundContext:
-        """Batched LossScore over S_t — one compiled call per round."""
+    # --------------------------------------------------- uniqueness audit
+    def _put_block(self, peer: str, round_idx: int) -> int:
+        """Server-side timestamp of the peer's round payload (tie-break
+        for cluster arbitration when no replayer is available)."""
+        bucket = self.store.buckets.get(peer)
+        meta = bucket.head(self.store.gradient_key(round_idx)) \
+            if bucket is not None else None
+        return meta.put_block if meta is not None else 1 << 62
+
+    def stage_uniqueness(self, ctx: RoundContext) -> RoundContext:
+        """Proof-of-unique-work audit over S_t (``repro.audit``).
+
+        Three checks, in escalating cost: (1) the chain commitment of the
+        consumed batch must match the chain-derived assignment digest;
+        (2) one jitted count-sketch + pairwise-cosine call over the
+        stacked payloads flags copy clusters — within the round and
+        against the previous round's sketches (delayed copies); (3)
+        replay audits (the peers' own shared jitted local-step program)
+        arbitrate clusters — the member matching its own replay is the
+        original — and spot-check ``audit_spot_k`` random peers. Flags
+        zero the round score for ``audit_ban_rounds`` rounds (scoreboard
+        stage) and demote the OpenSkill rating.
+        """
+        hp = self.hp
+        if not hp.audit_enabled:
+            return ctx
+        self._select_eval_set(ctx)
+        flagged: Dict[str, str] = {}
+        audit: Dict[str, Any] = {}
+        if ctx.eval_set:
+            # (1) commit-then-reveal: the digest a peer committed must
+            # match the batch the chain assigned it
+            for p in ctx.eval_set:
+                committed = self.chain.batch_commitment(p, ctx.round_idx)
+                if committed is None:
+                    if hp.audit_require_commit:
+                        flagged[p] = "missing_commit"
+                    continue
+                expected = assignment.batch_digest(
+                    self._assigned_batch(ctx, p))
+                if committed != expected:
+                    flagged[p] = "commit_mismatch"
+            # (2) fingerprints: ONE compiled call sketches the whole eval
+            # stack and compares it against itself + the recent-rounds
+            # reference window
+            prev_uids = [u for uids, _ in self._prev_sketches for u in uids]
+            pad = 1 << max(len(prev_uids) - 1, 0).bit_length() \
+                if len(prev_uids) > 1 else 1
+            ref = np.zeros((pad, hp.audit_fingerprint_dim), np.float32)
+            if prev_uids:
+                ref[:len(prev_uids)] = np.concatenate(
+                    [arr for _, arr in self._prev_sketches])
+            sk, cur, prev = self._fingerprint(ctx.stacked_payloads,
+                                              jnp.asarray(ref))
+            self.compiled_calls += 1
+            sk = np.asarray(sk)
+            cur, prev = np.asarray(cur), np.asarray(prev)
+            thr = hp.audit_similarity_threshold
+            # a cross-round match makes a peer a delayed-copy SUSPECT;
+            # the verdict goes through replay arbitration below (never
+            # unconditional — pseudo-gradients can be temporally
+            # correlated, and the honest victim must survive matching
+            # its own past payload republished under a copycat's uid)
+            delayed: List[str] = []
+            for i, p in enumerate(ctx.eval_set):
+                if p in flagged:
+                    continue
+                if any(q != p and prev[i, j] >= thr
+                       for j, q in enumerate(prev_uids)):
+                    delayed.append(p)
+            clusters = fingerprint.similarity_clusters(cur, ctx.eval_set,
+                                                       thr)
+            audit["clusters"] = [list(c) for c in clusters]
+            # (3) replay: arbitration of clusters + delayed suspects,
+            # plus random spot checks
+            spot: List[str] = []
+            if self._replayer is not None and hp.audit_spot_k > 0:
+                pool = [p for p in ctx.eval_set if p not in flagged]
+                take = min(hp.audit_spot_k, len(pool))
+                if take:
+                    picks = self._audit_rng.choice(len(pool), size=take,
+                                                   replace=False)
+                    spot = [pool[i] for i in sorted(picks.tolist())]
+            targets = sorted({p for c in clusters for p in c
+                              if p not in flagged}
+                             | set(spot) | set(delayed))
+            # replay margin per target: cos(payload, replay(assigned)) −
+            # cos(payload, replay(decoy)). Self-normalizing — both terms
+            # decay together as error feedback accumulates, but only the
+            # peer that actually trained on its assignment keeps a gap.
+            replay_margin: Dict[str, float] = {}
+            if self._replayer is not None and targets:
+                reps = [self._replayer.replay(
+                    self.params, [self._assigned_batch(ctx, p)])
+                    for p in targets]
+                reps += [self._replayer.replay(
+                    self.params, [self._unassigned_batch(ctx, p)])
+                    for p in targets]
+                self.compiled_calls += len(reps)
+                rsk = np.asarray(self._sketch(
+                    compress.stack_payloads(reps)))
+                self.compiled_calls += 1
+                for i, p in enumerate(targets):
+                    row = sk[ctx.stacked_index[p]]
+                    replay_margin[p] = (
+                        fingerprint.cosine(row, rsk[i])
+                        - fingerprint.cosine(row, rsk[len(targets) + i]))
+            for p in delayed:
+                # the suspect is a copy unless its payload matches a
+                # replay of its own assignment (the honest victim does;
+                # without a replayer the cross-round match must stand)
+                if replay_margin.get(p, -2.0) < hp.audit_replay_margin:
+                    flagged[p] = "delayed_copy"
+            for cluster in clusters:
+                members = [p for p in cluster if p not in flagged]
+                if not members:
+                    continue
+                if replay_margin:
+                    # the original is the member whose payload matches a
+                    # replay of its OWN assignment; copies carry the
+                    # victim's work and hold no margin of their own
+                    best = max(members,
+                               key=lambda p: replay_margin.get(p, -2.0))
+                    keep = (replay_margin.get(best, -2.0)
+                            >= hp.audit_replay_margin)
+                else:
+                    # no replayer: earliest upload wins the tie. This is
+                    # a heuristic (a copier of a delayed payload can land
+                    # first) — validators that can train must pass
+                    # grad_fn so replay arbitration decides instead.
+                    best = min(members, key=lambda p: self._put_block(
+                        p, ctx.round_idx))
+                    keep = True
+                for p in members:
+                    if p != best or not keep:
+                        flagged[p] = "copy_cluster"
+            for p in spot:
+                if (p not in flagged
+                        and replay_margin.get(p, 1.0)
+                        < hp.audit_replay_margin):
+                    flagged[p] = "replay_mismatch"
+            audit["replay_margins"] = {
+                p: round(float(s), 6)
+                for p, s in sorted(replay_margin.items())}
+            # only unflagged peers' sketches enter the reference window:
+            # a copycat's stored sketch IS its victim's payload, and must
+            # not come back as "someone else's previous work" next round
+            keep_rows = [i for i, p in enumerate(ctx.eval_set)
+                         if p not in flagged]
+            if keep_rows:
+                self._prev_sketches = (self._prev_sketches + [
+                    ([ctx.eval_set[i] for i in keep_rows],
+                     sk[np.asarray(keep_rows)])])[-AUDIT_REF_ROUNDS:]
+        # strikes: a fresh flag zeroes the peer for audit_ban_rounds; a
+        # clean evaluated round works one strike off
+        for p in ctx.eval_set:
+            if p in flagged:
+                self.audit_strikes[p] = hp.audit_ban_rounds
+            elif self.audit_strikes.get(p, 0) > 0:
+                self.audit_strikes[p] -= 1
+        ctx.audit_flagged = flagged
+        ctx.audit = audit
+        return ctx
+
+    def _select_eval_set(self, ctx: RoundContext) -> None:
+        """Sample S_t and stack its payloads once per round — shared by
+        whichever of uniqueness / primary-eval runs first."""
+        if ctx.eval_selected:
+            return
+        ctx.eval_selected = True
         hp = self.hp
         candidates = [p for p in ctx.active_peers
                       if self.store.within_put_window(
@@ -481,38 +734,76 @@ class Validator:
                     if self._fetch_payload(ctx, p) is not None]
         ctx.eval_set = eval_set
         if not eval_set:
-            return ctx
-        stacked = compress.stack_payloads(
+            return
+        ctx.stacked_payloads = compress.stack_payloads(
             [ctx.payloads[p] for p in eval_set])
-        ctx.stacked_payloads = stacked
         ctx.stacked_index = {p: i for i, p in enumerate(eval_set)}
+
+    def _assigned_batch(self, ctx: RoundContext, peer: str):
+        """SelectData(peer, t), computed once per round per peer (shared
+        by the commitment check, replay audits and primary eval)."""
+        if peer not in ctx.assigned_batches:
+            ctx.assigned_batches[peer] = self.data["assigned"](
+                peer, ctx.round_idx)
+        return ctx.assigned_batches[peer]
+
+    def _unassigned_batch(self, ctx: RoundContext, peer: str):
+        """UnassignedData(peer, t), cached like the assigned batch
+        (shared by the replay decoy and primary eval)."""
+        if peer not in ctx.unassigned_batches:
+            ctx.unassigned_batches[peer] = self.data["unassigned"](
+                peer, ctx.round_idx)
+        return ctx.unassigned_batches[peer]
+
+    def _resolve_baselines(self, ukeys: List[bytes], na: int, ua, ur):
+        """Baseline losses for the round's unique batches, reusing the
+        cross-validator cache per key: only the *missing* batches are
+        evaluated, by slicing the unique-batch stacks down to the misses
+        (ROADMAP partial-reuse follow-up — all-or-nothing before)."""
+        vals = np.full(len(ukeys), np.nan, np.float64)
+        if self.baseline_cache is not None:
+            found = self.baseline_cache.lookup_partial(self.step, ukeys)
+            for i, k in enumerate(ukeys):
+                if k in found:
+                    vals[i] = found[k]
+        missing = [i for i in range(len(ukeys)) if np.isnan(vals[i])]
+        if missing:
+            rows_a = np.asarray([i for i in missing if i < na], np.int32)
+            rows_r = np.asarray([i - na for i in missing if i >= na],
+                                np.int32)
+            ua_m = jax.tree.map(lambda u: u[rows_a], ua)
+            ur_m = jax.tree.map(lambda u: u[rows_r], ur)
+            got_a, got_r = self._baselines(self.params, ua_m, ur_m)
+            self.compiled_calls += 1
+            self.baseline_calls += 1
+            self.baseline_rows += len(missing)
+            got = np.concatenate([np.asarray(got_a, np.float64),
+                                  np.asarray(got_r, np.float64)])
+            vals[missing] = got
+            if (self.baseline_cache is not None
+                    and self.chain.checkpoint_pointer == self.uid):
+                self.baseline_cache.publish(
+                    self.step, [ukeys[i] for i in missing], got)
+        return (jnp.asarray(vals[:na], jnp.float32),
+                jnp.asarray(vals[na:], jnp.float32))
+
+    def stage_primary_eval(self, ctx: RoundContext) -> RoundContext:
+        """Batched LossScore over S_t — one compiled call per round."""
+        hp = self.hp
+        self._select_eval_set(ctx)
+        eval_set = ctx.eval_set
+        if not eval_set:
+            return ctx
         beta = hp.eval_beta_frac * self.lr_at()
-        batches_a = [self.data["assigned"](p, ctx.round_idx)
-                     for p in eval_set]
-        batches_r = [self.data["unassigned"](p, ctx.round_idx)
-                     for p in eval_set]
+        batches_a = [self._assigned_batch(ctx, p) for p in eval_set]
+        batches_r = [self._unassigned_batch(ctx, p) for p in eval_set]
         uniq_a, idx_a, keys_a = _unique_batches(batches_a)
         uniq_r, idx_r, keys_r = _unique_batches(batches_r)
         ua, ur = _stack_batches(uniq_a), _stack_batches(uniq_r)
         na, ukeys = len(uniq_a), keys_a + keys_r
-        base_a = base_r = None
-        if self.baseline_cache is not None:
-            cached = self.baseline_cache.lookup(self.step, ukeys)
-            if cached is not None:
-                base_a = jnp.asarray(cached[:na], jnp.float32)
-                base_r = jnp.asarray(cached[na:], jnp.float32)
-        if base_a is None:
-            base_a, base_r = self._baselines(self.params, ua, ur)
-            self.compiled_calls += 1
-            self.baseline_calls += 1
-            if (self.baseline_cache is not None
-                    and self.chain.checkpoint_pointer == self.uid):
-                self.baseline_cache.publish(
-                    self.step, ukeys,
-                    np.concatenate([np.asarray(base_a),
-                                    np.asarray(base_r)]))
+        base_a, base_r = self._resolve_baselines(ukeys, na, ua, ur)
         s_a, s_r = self._primary(
-            self.params, stacked, ua, ur,
+            self.params, ctx.stacked_payloads, ua, ur,
             jnp.asarray(idx_a), jnp.asarray(idx_r), base_a, base_r,
             jnp.float32(beta))
         self.compiled_calls += 1
@@ -524,8 +815,17 @@ class Validator:
         return ctx
 
     def stage_scoreboard(self, ctx: RoundContext) -> RoundContext:
-        """PoC μ (batched eq. 3) + OpenSkill + PEERSCORE + eq.-5 post."""
+        """PoC μ (batched eq. 3) + OpenSkill + PEERSCORE + eq.-5 post.
+
+        Audit verdicts land here: freshly flagged peers are demoted in
+        the rating book, peers with active audit strikes are excluded
+        from the OpenSkill match (a copied score must not steal rating
+        from honest peers) and their round score is zeroed before the
+        weights are posted on chain."""
         hp = self.hp
+        banned = {p for p in ctx.active_peers
+                  if self.audit_strikes.get(p, 0) > 0}
+        banned |= set(ctx.audit_flagged)
         if ctx.eval_set:
             mu = np.array([self._state(p).mu for p in ctx.eval_set])
             s_a = np.array([ctx.loss_scores_assigned[p]
@@ -534,16 +834,37 @@ class Validator:
             new_mu = S.poc_update_batched(mu, s_a, s_r, hp.poc_gamma)
             for p, m in zip(ctx.eval_set, new_mu):
                 self._state(p).mu = float(m)
+        for p in sorted(ctx.audit_flagged):
+            self.book.demote(p)
         # OpenSkill match over the random-subset scores
-        if len(ctx.loss_scores_rand) >= 2:
-            self.book.match(ctx.loss_scores_rand)
+        match_scores = {p: s for p, s in ctx.loss_scores_rand.items()
+                        if p not in banned}
+        if len(match_scores) >= 2:
+            self.book.match(match_scores)
         raw = {p: S.peer_score(
                    self._state(p).mu if hp.use_poc else 1.0,
                    self.book.ordinal(p))
                for p in ctx.active_peers}
         ctx.norm_scores = S.normalize_scores(raw, hp.norm_power)
+        if banned:
+            for p in banned:
+                if p in ctx.norm_scores:
+                    ctx.norm_scores[p] = 0.0
+            total = sum(ctx.norm_scores.values())
+            if total > 0:
+                ctx.norm_scores = {p: v / total
+                                   for p, v in ctx.norm_scores.items()}
         self.chain.post_weights(self.uid, ctx.norm_scores)
         ctx.weights = S.top_g_weights(ctx.norm_scores, hp.top_g)
+        if banned:
+            # a banned peer must never be topped up to 1/G by rank ties
+            # (eq. 6 hands the worst peer a slot whenever |peers| <= G)
+            for p in banned:
+                if p in ctx.weights:
+                    ctx.weights[p] = 0.0
+            total = sum(ctx.weights.values())
+            if total > 0:
+                ctx.weights = {p: v / total for p, v in ctx.weights.items()}
         return ctx
 
     def stage_aggregate(self, ctx: RoundContext) -> RoundContext:

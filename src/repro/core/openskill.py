@@ -89,3 +89,15 @@ class RatingBook:
 
     def ordinal(self, peer: str, z: float = 3.0) -> float:
         return self.get(peer).ordinal(z)
+
+    def demote(self, peer: str, z: float = 1.0) -> Rating:
+        """Audit penalty: shift μ down by z·σ without touching σ.
+
+        Failing a proof-of-unique-work audit is stronger evidence than a
+        lost match (the Plackett–Luce update treats losses as noisy), so
+        the demotion is applied directly — the rating recovers only by
+        winning real matches afterwards."""
+        r = self.get(peer)
+        demoted = Rating(mu=r.mu - z * r.sigma, sigma=r.sigma)
+        self.ratings[peer] = demoted
+        return demoted

@@ -131,7 +131,13 @@ def normalize_scores(scores: Dict[str, float], power: float = 2.0
 
 
 def top_g_weights(norm_scores: Dict[str, float], g: int) -> Dict[str, float]:
-    """Eq. 6: w_p = 1/G for the top-G normalized scores, else 0."""
+    """Eq. 6: w_p = 1/G for the top-G normalized scores, else 0.
+
+    Pure rank rule — exactly min(g, n) winners, weights sum to 1. Audit
+    exclusions happen at the weight level (``Validator.stage_scoreboard``
+    zeroes banned peers' weights; the sim engine filters zero-consensus
+    peers before the consensus top-G) so this invariant stays intact.
+    """
     if not norm_scores:
         return {}
     top = sorted(norm_scores, key=lambda p: -norm_scores[p])[:g]

@@ -64,6 +64,18 @@ class MarkovCorpus:
                 "labels": jnp.asarray(seqs[:, 1:])}
 
 
+def slice_pages(rng: np.random.RandomState, base: int, num_pages: int,
+                batch: int) -> np.ndarray:
+    """The page-partitioning rule behind every assignment flavour: draw
+    ``batch`` pages from the peer-specific quarter-slice anchored at
+    ``base``. One construction shared by the static-seed path below and
+    the chain-derived path (``repro.audit.assignment``) so the two can
+    never drift apart."""
+    span = max(num_pages // 4, batch)
+    return (base + rng.choice(span, size=batch,
+                              replace=False)) % num_pages
+
+
 def select_data(corpus: MarkovCorpus, seed: int, peer_uid: str,
                 round_idx: int, batch: int, seq_len: int) -> Dict:
     """Paper Algo 1 ``SelectData(seed, p, t)``: the peer's UNIQUE assigned
@@ -73,8 +85,7 @@ def select_data(corpus: MarkovCorpus, seed: int, peer_uid: str,
                                         round_idx))
     # carve a peer-specific slice of the page space
     base = _hash32(seed, "slice", peer_uid) % corpus.num_pages
-    pages = (base + rng.choice(corpus.num_pages // 4, size=batch,
-                               replace=False)) % corpus.num_pages
+    pages = slice_pages(rng, base, corpus.num_pages, batch)
     return corpus.batch_from_pages(pages, seq_len)
 
 

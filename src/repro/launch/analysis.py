@@ -363,6 +363,19 @@ def sim_telemetry_summary(telemetry) -> Dict:
     rounds = tel.get("rounds", [])
     base = dict(tel.get("summary", {}))
     shares = [r["honest_share"] for r in rounds]
+    # audit verdicts (repro.audit): the flagged share of consensus
+    # incentive in the final round — the "copies earn ~0" economics
+    # claim in one number. The flagged set itself comes from the
+    # embedded summary (one derivation, in repro.sim.telemetry), with a
+    # fallback for pre-audit telemetry exports.
+    flagged = base.get("audit_flagged_peers")
+    if flagged is None:
+        flagged = sorted({uid for r in rounds
+                          for per_val in (r.get("audit") or {}).values()
+                          for uid in per_val})
+    last_consensus = rounds[-1].get("consensus", {}) if rounds else {}
+    flagged_share = sum(w for p, w in last_consensus.items()
+                        if p in flagged)
     base.update({
         "scenario": tel.get("scenario"),
         "seed": tel.get("seed"),
@@ -371,5 +384,7 @@ def sim_telemetry_summary(telemetry) -> Dict:
         and all(s > 0.5 for s in shares),
         "network_drops": sum((r.get("network") or {}).get("dropped", 0)
                              for r in rounds),
+        "audit_flagged_peers": flagged,
+        "audit_flagged_final_share": flagged_share,
     })
     return base

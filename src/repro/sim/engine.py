@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.audit import assignment as audit_assignment
 from repro.comms.chain import Chain
 from repro.core import scores as S
 from repro.core.gauntlet import BaselineCache, RoundReport, Validator
@@ -67,6 +68,7 @@ class SimEngine:
         self.validators: Dict[str, Validator] = {v.uid: v
                                                  for v in validators}
         self.peers: Dict[str, PeerNode] = dict(peers)
+        self._pending_joins: set = set()     # bootstrap downloads in flight
         self.offline_validators: set = set()
         self.telemetry = telemetry or Telemetry("adhoc", 0)
         self.grad_fn = grad_fn
@@ -101,11 +103,27 @@ class SimEngine:
             fn()
 
     # ---------------------------------------------------- churn handlers
-    def _join(self, spec: PeerSpec) -> None:
+    def _join(self, spec: PeerSpec, instant: bool = False) -> None:
         if spec.uid in self.peers:
             return
         assert self.grad_fn is not None, "engine built without grad_fn"
         cp = self.validators[self.chain.checkpoint_pointer]
+        net = getattr(self.store, "network", None)
+        if not instant and net is not None:
+            # the checkpoint download transits the joiner's link: its
+            # replica exists only after bandwidth-proportional time, so
+            # "bootstrapping" peers miss produce windows emergently
+            ckpt_bytes = sum(int(np.asarray(leaf).nbytes)
+                             for leaf in jax.tree.leaves(cp.params))
+            delay = net.download_blocks(spec.uid, ckpt_bytes)
+            if delay > 0:
+                self.telemetry.log_event(self.chain.block, "bootstrap",
+                                         f"{spec.uid}+{delay}b")
+                self._pending_joins.add(spec.uid)
+                self.schedule_in(delay,
+                                 lambda: self._finish_join(spec))
+                return
+        self._pending_joins.discard(spec.uid)
         pc = PeerConfig(uid=spec.uid, behavior=spec.behavior,
                         data_multiplier=spec.data_multiplier,
                         desync_rounds=spec.desync_rounds,
@@ -117,7 +135,17 @@ class SimEngine:
                                         self.store, cp.data)
         self.telemetry.log_event(self.chain.block, "join", spec.uid)
 
+    def _finish_join(self, spec: PeerSpec) -> None:
+        """Deferred arm of a bandwidth-delayed bootstrap: only completes
+        if the peer's scheduled leave has not fired in the meantime — a
+        leaver must not be resurrected by its own in-flight download."""
+        if spec.uid in self._pending_joins:
+            self._join(spec, instant=True)
+
     def _leave(self, uid: str) -> None:
+        # a leave while the bootstrap download is still in flight simply
+        # abandons the download
+        self._pending_joins.discard(uid)
         if uid not in self.peers:
             return
         self.chain.deregister_peer(uid)
@@ -219,7 +247,12 @@ class SimEngine:
         # --- incentive resolves across validators by stake-weighted median
         consensus = self.chain.consensus_weights()
         if self.multi:
-            agg_weights = S.top_g_weights(consensus, self.hp.top_g)
+            # zero-consensus peers (audit-zeroed by the validator quorum)
+            # must not be topped up to 1/G by rank ties; filtering on the
+            # shared consensus keeps every replica bit-identical
+            agg_weights = S.top_g_weights(
+                {p: w for p, w in consensus.items() if w > 0},
+                self.hp.top_g)
         else:
             agg_weights = ctxs[order[0].uid].weights if order else {}
         # --- coordinated aggregation: every replica applies the same rule
@@ -234,6 +267,9 @@ class SimEngine:
             ctxs[v.uid] = ctx
             lr = ctx.lr
             self.reports[v.uid].append(ctx.report())
+            for uid, reason in sorted(ctx.audit_flagged.items()):
+                self.telemetry.log_event(self.chain.block, "audit_flag",
+                                         f"{v.uid}:{uid}:{reason}")
         for uid in active:
             node = self.peers.get(uid)
             if node is not None:
@@ -280,7 +316,9 @@ class SimEngine:
             val_loss=val_loss, lr=(order and ctxs[order[0].uid].lr) or 0.0,
             checkpoint=cp_uid,
             offline_validators=sorted(self.offline_validators),
-            network=net_delta)
+            network=net_delta,
+            audit={v.uid: dict(sorted(ctxs[v.uid].audit_flagged.items()))
+                   for v in order})
 
     def run(self, num_rounds: Optional[int] = None) -> Telemetry:
         start = self.chain.round_of()
@@ -312,19 +350,14 @@ class SimEngine:
             eval_set_size=scenario.eval_set_size or n_specs,
             demo_chunk=16, demo_topk=8, poc_gamma=0.6)
         corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=scenario.seed)
-        chain = Chain(blocks_per_round=blocks_per_round)
+        chain = Chain(blocks_per_round=blocks_per_round,
+                      genesis_seed=scenario.seed)
         network = NetworkModel(seed=scenario.seed)
         store = SimBucketStore(chain, network)
-
-        def assigned(peer, rnd):
-            return pipeline.select_data(corpus, hp.seed, peer, rnd, batch,
-                                        seq_len)
-
-        def unassigned(peer, rnd):
-            return pipeline.unassigned_data(corpus, hp.seed, peer, rnd,
-                                            batch, seq_len)
-
-        data_fns = {"assigned": assigned, "unassigned": unassigned}
+        # assignments derive from the chain block hash (auditable,
+        # commit-then-reveal — repro.audit.assignment)
+        data_fns = audit_assignment.chain_data_fns(corpus, chain, hp.seed,
+                                                   batch, seq_len)
         params = M.init_params(cfg, jax.random.PRNGKey(hp.seed))
         metas = compress.tree_meta(params, hp.demo_chunk)
         eval_loss = jax.jit(lambda p, b: M.loss_fn(p, b, cfg)[0])
@@ -339,7 +372,7 @@ class SimEngine:
                       rng=np.random.RandomState(
                           (scenario.seed * 7919
                            + zlib.crc32(vs.uid.encode())) % (2 ** 31)),
-                      baseline_cache=cache)
+                      baseline_cache=cache, grad_fn=grad_fn)
             for vs in scenario.validators]
         telemetry = Telemetry(scenario.name, scenario.seed, meta={
             "model": cfg.name, "params": cfg.param_count(),
@@ -364,7 +397,8 @@ class SimEngine:
         # translate the declarative lifecycle into scheduled events
         for spec in scenario.peers:
             if spec.join_round <= 0:
-                engine._join(spec)
+                # genesis peers ARE the network: no checkpoint to fetch
+                engine._join(spec, instant=True)
             else:
                 engine.schedule_round(
                     spec.join_round,

@@ -33,6 +33,9 @@ class LinkProfile:
     bytes_per_block: float = math.inf    # upload bandwidth
     drop_prob: float = 0.0               # per-put loss probability
     jitter_blocks: float = 0.0           # uniform extra delay in [0, jitter)
+    # download bandwidth (checkpoint bootstrap); asymmetric because real
+    # joiners pull checkpoints from fast blob storage, not peer uplinks
+    download_bytes_per_block: float = math.inf
 
 
 PERFECT = LinkProfile()
@@ -75,6 +78,20 @@ class NetworkModel:
         delay = p.latency_blocks
         if p.bytes_per_block > 0 and math.isfinite(p.bytes_per_block):
             delay += size_bytes / p.bytes_per_block
+        if p.jitter_blocks > 0:
+            delay += self.rng.rand() * p.jitter_blocks
+        return int(math.ceil(delay))
+
+    def download_blocks(self, uid: str, size_bytes: int) -> int:
+        """Blocks to pull ``size_bytes`` down the peer's link (checkpoint
+        bootstrap): bandwidth-proportional in the checkpoint size. A
+        failed chunk is retried by the fetcher, so downloads cost time,
+        never loss."""
+        p = self.profile(uid)
+        delay = p.latency_blocks
+        if (p.download_bytes_per_block > 0
+                and math.isfinite(p.download_bytes_per_block)):
+            delay += size_bytes / p.download_bytes_per_block
         if p.jitter_blocks > 0:
             delay += self.rng.rand() * p.jitter_blocks
         return int(math.ceil(delay))

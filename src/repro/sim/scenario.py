@@ -31,22 +31,31 @@ class LinkSpec:
     ``upload_rounds`` is the time one full payload takes to upload, as a
     fraction of a round — 1.2 means the peer *cannot* make the put window
     on bandwidth alone; 0.5 means it lands mid-window.
+
+    ``download_rounds`` is the same unit for the peer's *download*
+    direction (0 = unconstrained): joiners pay it, scaled to the real
+    checkpoint size, before their replica exists — checkpoint bootstrap
+    is bandwidth-proportional, not instant.
     """
 
     latency_rounds: float = 0.0
     upload_rounds: float = 0.0
     drop_prob: float = 0.0
     jitter_rounds: float = 0.0
+    download_rounds: float = 0.0
 
     def resolve(self, payload_bytes: int,
                 blocks_per_round: int) -> LinkProfile:
         bpb = (payload_bytes / (self.upload_rounds * blocks_per_round)
                if self.upload_rounds > 0 else math.inf)
+        down = (payload_bytes / (self.download_rounds * blocks_per_round)
+                if self.download_rounds > 0 else math.inf)
         return LinkProfile(
             latency_blocks=self.latency_rounds * blocks_per_round,
             bytes_per_block=bpb,
             drop_prob=self.drop_prob,
-            jitter_blocks=self.jitter_rounds * blocks_per_round)
+            jitter_blocks=self.jitter_rounds * blocks_per_round,
+            download_bytes_per_block=down)
 
 
 FAST_LINK = LinkSpec()
@@ -209,6 +218,47 @@ def flash_crowd(rounds: int = 12, seed: int = 0) -> Scenario:
         default_link=LinkSpec(upload_rounds=0.3, jitter_rounds=0.3),
         description="8-peer join burst on constrained links; founders "
                     "must not be drowned out")
+
+
+@register_scenario
+def copycat_ring(rounds: int = 10, seed: int = 0) -> Scenario:
+    """The paper's 'unique computations' pillar under direct attack: a
+    ring of copycats republishes one honest victim's payload — verbatim,
+    delayed by a round, and noise-masked. The audit layer
+    (``repro.audit``) must flag every ring member with zero false
+    positives on the honest fleet, and the flagged copies must earn ~0
+    consensus incentive while the victim keeps full credit."""
+    honest = tuple(PeerSpec(uid=f"worker-{i}") for i in range(5))
+    ring = (
+        PeerSpec(uid="ring-verbatim", behavior="copycat",
+                 copy_victim="worker-0"),
+        PeerSpec(uid="ring-delayed", behavior="copycat_delayed",
+                 copy_victim="worker-0"),
+        PeerSpec(uid="ring-noise", behavior="copycat_noise",
+                 copy_victim="worker-0"),
+    )
+    return Scenario(
+        name="copycat_ring", rounds=rounds, seed=seed,
+        peers=honest + ring,
+        description="verbatim/delayed/noise-masked copies of one victim; "
+                    "audit must zero the ring, never the honest fleet")
+
+
+@register_scenario
+def sybil_mirror(rounds: int = 10, seed: int = 0) -> Scenario:
+    """One operator multiplies its incentive by running sybil identities
+    that mirror its own (honest) payload with evasion noise. The audit
+    layer must collapse the mirror cluster onto the single original: the
+    operator keeps one peer's worth of credit, the sybils get zero."""
+    fleet = tuple(PeerSpec(uid=f"honest-{i}") for i in range(5))
+    sybils = tuple(
+        PeerSpec(uid=f"sybil-{i}", behavior="copycat_noise",
+                 copy_victim="operator") for i in range(3))
+    return Scenario(
+        name="sybil_mirror", rounds=rounds, seed=seed,
+        peers=fleet + (PeerSpec(uid="operator"),) + sybils,
+        description="one operator + 3 noise-masked mirrors of its "
+                    "payload; audit pays the original exactly once")
 
 
 @register_scenario

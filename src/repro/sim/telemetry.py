@@ -49,6 +49,11 @@ class Telemetry:
                   if r.get("val_loss") is not None]
         pass_rates = [rate for r in self.rounds
                       for rate in r.get("fast_pass_rate", {}).values()]
+        # audit verdicts: {round -> {validator -> {uid -> reason}}}
+        flags = [(uid, reason)
+                 for r in self.rounds
+                 for per_val in (r.get("audit") or {}).values()
+                 for uid, reason in per_val.items()]
         return {
             "rounds": len(self.rounds),
             "final_honest_share": last.get("honest_share"),
@@ -60,6 +65,9 @@ class Telemetry:
             "val_losses": losses,
             "final_consensus": last.get("consensus", {}),
             "events": len(self.events),
+            "audit_flags": len(flags),
+            "audit_flagged_peers": sorted({uid for uid, _ in flags}),
+            "audit_flag_reasons": sorted({reason for _, reason in flags}),
         }
 
     def to_dict(self) -> Dict[str, Any]:

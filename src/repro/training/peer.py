@@ -11,24 +11,41 @@ Behaviours model the paper's simulations (§6 Fig. 2) and threat model (§4):
   offline     — registers but never contributes
   byz_norm    — honest gradient, rescaled 1e4x (norm attack, §4)
   byz_noise   — valid-format Gaussian-noise payload
-  copycat     — republishes another peer's payload (caught by PoC)
+  copycat     — republishes another peer's payload verbatim
+  copycat_delayed — republishes the victim's PREVIOUS-round payload
+                (evades same-round equality; caught by the audit layer's
+                cross-round fingerprint comparison)
+  copycat_noise — republishes the victim's payload + small noise on the
+                coefficients (evades digest dedup; caught by similarity
+                clustering + replay arbitration)
+
+Every producing peer also posts the commit-then-reveal digest of the
+batch it consumed (``Chain.commit_batch``, audited by the validator's
+uniqueness stage). Copycats adversarially forge the digest of their
+*assigned* batch — they can compute the assignment without training on
+it — so the commitment alone never convicts them; the fingerprint and
+replay audits do.
 """
 from __future__ import annotations
 
 import dataclasses
 import weakref
+import zlib
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.audit import assignment
 from repro.comms.bucket import BucketStore
 from repro.comms.chain import Chain
 from repro.configs.base import TrainConfig
 from repro.core import byzantine, scores as S
 from repro.core.gauntlet import eligible_contributors
 from repro.demo import compress, optimizer as demo_opt
+
+COPYCAT_BEHAVIORS = ("copycat", "copycat_delayed", "copycat_noise")
 
 
 @dataclasses.dataclass
@@ -137,19 +154,22 @@ class PeerNode:
         return (self.pc.behavior == "desync"
                 and self.pc.desync_start <= round_idx < self._paused_until)
 
-    def _steal_payload(self, round_idx: int):
+    def _steal_payload(self, round_idx: int, delayed: bool = False):
         """Copycat: republish the victim's freshest readable payload.
 
         Under a delayed network the victim's current-round upload may not
         have landed when the copycat produces, so fall back to the
         previous round's object — exactly what a live copier would see in
-        the victim's bucket. None if nothing is readable (victim churned
-        or never published)."""
+        the victim's bucket. ``delayed`` copiers deliberately take only
+        the previous round's payload (nothing in the current round equals
+        it). None if nothing is readable (victim churned or never
+        published)."""
         try:
             rk = self.chain.peers[self.pc.copy_victim].bucket_read_key
         except KeyError:
             return None
-        for rnd in (round_idx, round_idx - 1):
+        rounds = (round_idx - 1,) if delayed else (round_idx, round_idx - 1)
+        for rnd in rounds:
             if rnd < 0:
                 break
             try:
@@ -169,14 +189,29 @@ class PeerNode:
         bucket = self.store.buckets.get(self.uid)
         if bucket is None:
             return       # churned: the bucket is gone, nowhere to publish
-        if b == "copycat" and self.pc.copy_victim:
-            payload = self._steal_payload(round_idx)
+        if b in COPYCAT_BEHAVIORS and self.pc.copy_victim:
+            payload = self._steal_payload(
+                round_idx, delayed=(b == "copycat_delayed"))
             if payload is None:
                 return
+            if b == "copycat_noise":
+                # fold the uid in: each copier masks with ITS OWN noise,
+                # otherwise two mirrors of one victim collapse into
+                # byte-identical payloads (verbatim copies of each other)
+                payload = byzantine.noise_mask_copy(
+                    payload, jax.random.fold_in(
+                        jax.random.PRNGKey(round_idx * 31 + 7),
+                        zlib.crc32(self.uid.encode())))
+            # adversarially forge the commitment: the copycat CAN compute
+            # its assignment without training on it, so the digest check
+            # alone never convicts — fingerprints and replay must
+            claim = self.data["assigned"](self.uid, round_idx)
         else:
             batch = self.data["assigned"](self.uid, round_idx)
             if b == "lazy":
                 batch = self.data["unassigned"](self.uid, round_idx)
+            # the commit binds the payload to the data actually consumed
+            claim = batch
             batches = [batch]
             for j in range(self.pc.data_multiplier - 1):
                 batches.append(self.data["unassigned"](
@@ -188,6 +223,8 @@ class PeerNode:
             elif b == "byz_noise":
                 payload = byzantine.noise_attack(
                     payload, jax.random.PRNGKey(round_idx))
+        self.chain.commit_batch(self.uid, round_idx,
+                                assignment.batch_digest(claim))
         size = compress.payload_bytes(payload)
         if b == "late":
             # simulate missing the window: stamp after window close

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.audit import assignment as audit_assignment
 from repro.comms.bucket import BucketStore
 from repro.comms.chain import Chain
 from repro.configs.base import ModelConfig, TrainConfig
@@ -41,18 +42,12 @@ def build_sim(cfg: ModelConfig, hp: TrainConfig,
               eval_batch: int = 8):
     """Wire up a complete permissionless run."""
     corpus = corpus or pipeline.MarkovCorpus(cfg.vocab_size, seed=hp.seed)
-    chain = Chain(blocks_per_round=10)
+    chain = Chain(blocks_per_round=10, genesis_seed=hp.seed)
     store = BucketStore(chain)
-
-    def assigned(peer: str, rnd: int):
-        return pipeline.select_data(corpus, hp.seed, peer, rnd, batch,
-                                    seq_len)
-
-    def unassigned(peer: str, rnd: int):
-        return pipeline.unassigned_data(corpus, hp.seed, peer, rnd,
-                                        eval_batch, seq_len)
-
-    data_fns = {"assigned": assigned, "unassigned": unassigned}
+    # assigned data derives from the chain block hash (auditable,
+    # repro.audit.assignment); the random subset is drawn as before
+    data_fns = audit_assignment.chain_data_fns(
+        corpus, chain, hp.seed, batch, seq_len, eval_batch=eval_batch)
 
     key = jax.random.PRNGKey(hp.seed)
     params = M.init_params(cfg, key)
@@ -68,7 +63,8 @@ def build_sim(cfg: ModelConfig, hp: TrainConfig,
 
     validator = Validator("validator-0", params, metas, eval_loss_j, hp,
                           chain, store, data_fns,
-                          rng=np.random.RandomState(hp.seed))
+                          rng=np.random.RandomState(hp.seed),
+                          grad_fn=grad_fn)
     peers = {}
     for pc in peer_configs:
         peers[pc.uid] = PeerNode(pc, params, metas, grad_fn, hp, chain,

@@ -1,0 +1,216 @@
+"""Proof-of-unique-work audit subsystem (repro.audit): chain-committed
+assignments, payload fingerprinting, replay audits, and the acceptance
+economics — copycats earn ~0 consensus incentive with zero false
+positives on honest peers across seeds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.audit import assignment, fingerprint
+from repro.comms.chain import Chain
+from repro.configs.registry import tiny_config
+from repro.core import byzantine
+from repro.demo.compress import Payload
+from repro.sim import SimEngine, get_scenario
+
+CFG = tiny_config()
+
+
+# ------------------------------------------------------ chain assignments
+
+
+def test_assigned_pages_deterministic_and_distinct():
+    chain = Chain(blocks_per_round=10, genesis_seed=7)
+    bh0, bh1 = chain.block_hash(0), chain.block_hash(10)
+    a = assignment.assigned_pages(bh0, "p0", 0, 4096, 4)
+    b = assignment.assigned_pages(bh0, "p0", 0, 4096, 4)
+    np.testing.assert_array_equal(a, b)
+    # a different round (block hash) or peer draws different pages
+    assert not np.array_equal(
+        a, assignment.assigned_pages(bh1, "p0", 1, 4096, 4))
+    assert not np.array_equal(
+        a, assignment.assigned_pages(bh0, "p1", 0, 4096, 4))
+
+
+def test_assignment_depends_on_chain_genesis():
+    """Assignments derive from the block hash: two chains with different
+    genesis disagree, so work cannot be precomputed chain-independently."""
+    bh_a = Chain(genesis_seed=0).block_hash(0)
+    bh_b = Chain(genesis_seed=1).block_hash(0)
+    assert bh_a != bh_b
+    assert not np.array_equal(
+        assignment.assigned_pages(bh_a, "p0", 0, 4096, 4),
+        assignment.assigned_pages(bh_b, "p0", 0, 4096, 4))
+
+
+def test_batch_commitments_are_immutable():
+    chain = Chain()
+    chain.register_peer("p0", "rk-p0")
+    chain.commit_batch("p0", 0, b"first")
+    chain.commit_batch("p0", 0, b"second")          # ignored: first wins
+    assert chain.batch_commitment("p0", 0) == b"first"
+    assert chain.batch_commitment("p0", 1) is None
+    with pytest.raises(AssertionError):
+        chain.commit_batch("ghost", 0, b"x")        # must register first
+
+
+def test_batch_digest_binds_content():
+    b1 = {"tokens": jnp.ones((2, 8), jnp.int32),
+          "labels": jnp.zeros((2, 8), jnp.int32)}
+    b2 = {"tokens": jnp.ones((2, 8), jnp.int32),
+          "labels": jnp.zeros((2, 8), jnp.int32)}
+    b3 = {"tokens": jnp.zeros((2, 8), jnp.int32),
+          "labels": jnp.zeros((2, 8), jnp.int32)}
+    assert assignment.batch_digest(b1) == assignment.batch_digest(b2)
+    assert assignment.batch_digest(b1) != assignment.batch_digest(b3)
+
+
+# ----------------------------------------------------------- fingerprints
+
+
+def _rand_payload(key, n_leaves=3, nc=6, k=4, grid=64):
+    leaves = {}
+    for i in range(n_leaves):
+        kv, ki, key = jax.random.split(jax.random.fold_in(key, i), 3)
+        vals = jax.random.normal(kv, (nc, k), jnp.float32)
+        idx = jax.random.randint(ki, (nc, k), 0, grid, jnp.int32)
+        leaves[f"w{i}"] = Payload(vals=vals, idx=idx)
+    return leaves
+
+
+def test_sketch_separates_copies_from_independent_payloads():
+    key = jax.random.PRNGKey(0)
+    a = _rand_payload(jax.random.fold_in(key, 1))
+    b = _rand_payload(jax.random.fold_in(key, 2))
+    verbatim = byzantine.copy_payload(a)
+    masked = byzantine.noise_mask_copy(a, jax.random.fold_in(key, 3))
+    from repro.demo import compress
+    stacked = compress.stack_payloads([a, b, verbatim, masked])
+    sk = sketch = np.asarray(fingerprint.sketch_stacked(stacked, 256, 42))
+    sim = np.asarray(fingerprint.cosine_matrix(
+        jnp.asarray(sk), jnp.asarray(sketch)))
+    assert sim[0, 2] > 0.999                        # verbatim copy
+    assert sim[0, 3] > 0.95                         # noise-masked copy
+    assert abs(sim[0, 1]) < 0.5                     # independent payloads
+    clusters = fingerprint.similarity_clusters(
+        sim, ["a", "b", "verb", "mask"], 0.9)
+    assert clusters == [["a", "mask", "verb"]]
+
+
+def test_sketch_is_seed_sensitive_but_round_stable():
+    key = jax.random.PRNGKey(1)
+    a = _rand_payload(key)
+    from repro.demo import compress
+    stacked = compress.stack_payloads([a])
+    s1 = np.asarray(fingerprint.sketch_stacked(stacked, 128, 7))
+    s2 = np.asarray(fingerprint.sketch_stacked(stacked, 128, 7))
+    s3 = np.asarray(fingerprint.sketch_stacked(stacked, 128, 8))
+    np.testing.assert_array_equal(s1, s2)
+    assert not np.array_equal(s1, s3)
+
+
+# ------------------------------------------------------- rating demotion
+
+
+def test_openskill_demote_lowers_ordinal():
+    from repro.core.openskill import RatingBook
+    book = RatingBook()
+    before = book.ordinal("p")
+    book.demote("p")
+    assert book.ordinal("p") < before
+    assert book.get("p").sigma == pytest.approx(25.0 / 3.0)
+
+
+# ------------------------------------------------- acceptance: economics
+
+
+def _run_ring(seed, rounds=4):
+    sc = get_scenario("copycat_ring", rounds=rounds, seed=seed)
+    eng = SimEngine.from_scenario(sc, CFG, batch=2, seq_len=32)
+    tel = eng.run()
+    return eng, tel
+
+
+HONEST = [f"worker-{i}" for i in range(5)]
+RING = ["ring-verbatim", "ring-delayed", "ring-noise"]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_copycat_ring_flagged_with_zero_false_positives(seed):
+    """Acceptance: verbatim and noise-masked copycats are flagged by
+    stage_uniqueness, honest peers never are (any validator, any round),
+    and flagged copies earn < 5% of an honest peer's consensus incentive."""
+    eng, tel = _run_ring(seed)
+    flagged_ever = set()
+    for v_uid, reports in eng.reports.items():
+        for rep in reports:
+            flagged_ever |= set(rep.audit_flagged)
+            # zero false positives: no honest peer ever flagged
+            assert not (set(rep.audit_flagged) & set(HONEST)), (
+                v_uid, rep.round_idx, rep.audit_flagged)
+    assert {"ring-verbatim", "ring-noise"} <= flagged_ever
+    assert "ring-delayed" in flagged_ever       # cross-round fingerprint
+    # diagnostics: the similarity cluster groups the ring with its victim
+    clusters = [c for reports in eng.reports.values() for rep in reports
+                for c in rep.audit_detail.get("clusters", [])]
+    assert any("worker-0" in c and "ring-verbatim" in c for c in clusters)
+    consensus = eng.chain.consensus_weights()
+    honest_mean = np.mean([consensus.get(p, 0.0) for p in HONEST])
+    assert honest_mean > 0
+    for cc in RING:
+        assert consensus.get(cc, 0.0) < 0.05 * honest_mean, (cc, consensus)
+
+
+def test_copycat_ring_telemetry_surfaces_verdicts():
+    eng, tel = _run_ring(0)
+    d = tel.to_dict()
+    assert d["summary"]["audit_flags"] > 0
+    assert set(d["summary"]["audit_flagged_peers"]) <= set(RING)
+    kinds = {e["kind"] for e in tel.events}
+    assert "audit_flag" in kinds
+    from repro.launch.analysis import sim_telemetry_summary
+    summ = sim_telemetry_summary(d)
+    assert summ["audit_flagged_peers"] == sorted(
+        d["summary"]["audit_flagged_peers"])
+    assert summ["audit_flagged_final_share"] < 0.05
+    assert summ["honest_majority_all_rounds"]
+
+
+def test_sybil_mirror_pays_operator_once():
+    """The operator's mirrors are zeroed; the operator itself keeps
+    honest-peer-level incentive (it did the work exactly once)."""
+    sc = get_scenario("sybil_mirror", rounds=4, seed=0)
+    eng = SimEngine.from_scenario(sc, CFG, batch=2, seq_len=32)
+    eng.run()
+    flagged_ever = set()
+    for reports in eng.reports.values():
+        for rep in reports:
+            flagged_ever |= set(rep.audit_flagged)
+    sybils = {f"sybil-{i}" for i in range(3)}
+    assert sybils <= flagged_ever
+    assert "operator" not in flagged_ever
+    consensus = eng.chain.consensus_weights()
+    honest_mean = np.mean([consensus.get(f"honest-{i}", 0.0)
+                           for i in range(5)])
+    for s in sybils:
+        assert consensus.get(s, 0.0) < 0.05 * max(honest_mean, 1e-9)
+    assert consensus.get("operator", 0.0) > 0
+
+
+def test_lazy_peer_caught_by_commitment_check():
+    """A lazy peer commits the digest of the batch it actually consumed
+    (the random subset) — the commit-then-reveal check exposes it without
+    waiting for proof-of-computation to converge."""
+    from repro.sim import PeerSpec, Scenario
+    sc = Scenario(name="mini-lazy-audit", rounds=2, seed=3,
+                  peers=(PeerSpec(uid="h0"), PeerSpec(uid="h1"),
+                         PeerSpec(uid="h2"),
+                         PeerSpec(uid="slacker", behavior="lazy")))
+    eng = SimEngine.from_scenario(sc, CFG, batch=2, seq_len=32)
+    eng.run()
+    v = list(eng.validators.values())[0]
+    reasons = {uid: reason for rep in eng.reports[v.uid]
+               for uid, reason in rep.audit_flagged.items()}
+    assert reasons.get("slacker") == "commit_mismatch"
+    assert set(reasons) == {"slacker"}

@@ -68,7 +68,12 @@ def test_payloads_fetched_once_per_round(one_round):
 
 
 def test_compiled_calls_constant_in_peer_count():
-    """Acceptance: O(1) compiled calls per round regardless of |S_t|."""
+    """Acceptance: O(1) compiled calls per round regardless of |S_t|.
+
+    Composition: sync-scores + audit fingerprint + 2·audit_spot_k replay
+    local-steps + the replay sketch + baselines + primary + aggregate —
+    the replay count is bounded by the spot-check constant, never by the
+    eval-set size."""
     counts = {}
     for n in (3, 6):
         hp = TrainConfig(**{**HP.__dict__, "eval_set_size": n})
@@ -77,9 +82,23 @@ def test_compiled_calls_constant_in_peer_count():
         validator.compiled_calls = 0
         rep = validator.run_round(0, list(peers.keys()))
         assert len(rep.evaluated) == n
+        assert rep.audit_flagged == {}          # honest fleet: no flags
         counts[n] = validator.compiled_calls
-    # sync-scores + baselines + primary-eval + aggregate
-    assert counts[3] == counts[6] == 4
+    expected = 5 + 2 * HP.audit_spot_k + 1
+    assert counts[3] == counts[6] == expected
+
+
+def test_compiled_calls_without_audit_stage():
+    """With the audit stage disabled the pipeline is the original four
+    dispatches (sync-scores, baselines, primary, aggregate)."""
+    hp = TrainConfig(**{**HP.__dict__, "eval_set_size": 3,
+                        "audit_enabled": False})
+    validator, peers, chain, store, corpus = _sim(3, hp)
+    _publish(validator, peers, chain, 0)
+    validator.compiled_calls = 0
+    rep = validator.run_round(0, list(peers.keys()))
+    assert len(rep.evaluated) == 3
+    assert validator.compiled_calls == 4
 
 
 def test_aggregate_reuses_stacked_rows():
@@ -179,3 +198,49 @@ def test_baseline_cache_dedupes_across_validators():
     cache.publish(1, [b"k1"], [3.0])              # step rolls the store
     assert cache.lookup(1, [b"k2"]) is None
     assert cache.hits == 1 and cache.misses == 3
+
+
+def test_baseline_cache_partial_lookup():
+    """ROADMAP partial reuse: a lookup that covers only some keys returns
+    the known subset, so the validator computes just the missing rows."""
+    from repro.core.gauntlet import BaselineCache
+    cache = BaselineCache()
+    cache.publish(0, [b"k1", b"k3"], [1.0, 3.0])
+    found = cache.lookup_partial(0, [b"k1", b"k2", b"k3"])
+    assert found == {b"k1": 1.0, b"k3": 3.0}
+    assert cache.partial_hits == 1 and cache.misses == 1
+    # merging publishes extend the same step
+    cache.publish(0, [b"k2"], [2.0])
+    assert cache.lookup_partial(0, [b"k1", b"k2", b"k3"]) == {
+        b"k1": 1.0, b"k2": 2.0, b"k3": 3.0}
+    assert cache.hits == 1
+
+
+def test_partial_baseline_reuse_computes_only_missing_rows():
+    """A replica validator whose eval set is a superset of the pointer's
+    published keys computes ONLY the missing unique batches (sliced
+    stacks), not the whole baseline set."""
+    import numpy as np
+    from repro.core.gauntlet import BaselineCache, Validator
+    validator, peers, chain, store, corpus = _sim(4)
+    cache = BaselineCache()
+    validator.baseline_cache = cache
+    replica = Validator("validator-replica", validator.params,
+                        validator.metas, validator.eval_loss, validator.hp,
+                        chain, store, validator.data, stake=10.0,
+                        rng=np.random.RandomState(123),
+                        baseline_cache=cache)
+    assert chain.checkpoint_pointer == validator.uid   # highest stake
+    _publish(validator, peers, chain, 0)
+    # pointer evaluates only 3 of 4 peers and publishes their baselines
+    validator.hp = TrainConfig(**{**HP.__dict__, "eval_set_size": 3})
+    ctx = validator.build_context(0, list(peers.keys()))
+    validator.stage_primary_eval(ctx)
+    assert len(ctx.eval_set) == 3
+    assert validator.baseline_rows == 6               # 3 assigned + 3 rand
+    # the replica evaluates all 4: only the extra peer's batches are new
+    rctx = replica.build_context(0, list(peers.keys()))
+    replica.stage_primary_eval(rctx)
+    assert len(rctx.eval_set) == 4
+    assert replica.baseline_rows == 2                 # 1 assigned + 1 rand
+    assert cache.partial_hits == 1

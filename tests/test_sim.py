@@ -75,7 +75,111 @@ def test_sim_store_orphans_put_when_bucket_churns():
 
 def test_registry_has_required_scenarios():
     assert {"churn_storm", "byzantine_wave", "validator_failover",
-            "flash_crowd", "slow_links"} <= set(SCENARIOS)
+            "flash_crowd", "slow_links", "copycat_ring",
+            "sybil_mirror"} <= set(SCENARIOS)
+
+
+def test_joiner_checkpoint_download_costs_bandwidth_time():
+    """ROADMAP follow-up: a joiner's replica exists only after the
+    checkpoint transits its download link — bandwidth-proportional, not
+    instant — so a constrained joiner misses its first produce window."""
+    sc = Scenario(
+        name="mini-bootstrap", rounds=4, seed=9,
+        peers=(PeerSpec(uid="fast-0"), PeerSpec(uid="fast-1"),
+               PeerSpec(uid="fast-2"),
+               PeerSpec(uid="newcomer", join_round=1,
+                        link=LinkSpec(download_rounds=0.02))))
+    eng = _engine(sc)
+    tel = eng.run()
+    boot = [e for e in tel.events if e["kind"] == "bootstrap"]
+    join = [e for e in tel.events if e["kind"] == "join"
+            and e["detail"] == "newcomer"]
+    assert len(boot) == 1 and len(join) == 1
+    # download_rounds is payload-relative; the checkpoint is much bigger,
+    # so the join lands well after the scheduled round-1 block
+    delay = join[0]["block"] - boot[0]["block"]
+    ckpt = sum(int(np.asarray(leaf).nbytes) for leaf in jax.tree.leaves(
+        list(eng.validators.values())[0].params))
+    from repro.sim import estimate_payload_bytes
+    v = list(eng.validators.values())[0]
+    payload = estimate_payload_bytes(v.metas, v.hp.demo_topk)
+    assert delay >= int(0.02 * 10 * ckpt / payload)   # ∝ checkpoint bytes
+    assert "newcomer" in eng.peers                    # ...but it DID join
+    # it could not have published round 1 (no replica during the window)
+    assert not eng.store.within_put_window("newcomer", 1, 10)
+
+
+def test_leave_during_bootstrap_cancels_the_join():
+    """A peer whose scheduled leave fires while its checkpoint download
+    is still in flight must NOT be resurrected when the download lands."""
+    sc = Scenario(
+        name="mini-ghost", rounds=5, seed=9,
+        peers=(PeerSpec(uid="a"), PeerSpec(uid="b"), PeerSpec(uid="c"),
+               PeerSpec(uid="ghost", join_round=1, leave_round=2,
+                        link=LinkSpec(download_rounds=0.2))))
+    eng = _engine(sc)
+    tel = eng.run()
+    # the download takes many rounds (checkpoint >> payload), so the
+    # leave fires first and the join must never complete
+    assert "ghost" not in eng.peers
+    assert not eng._pending_joins
+    joins = [e for e in tel.events if e["kind"] == "join"
+             and e["detail"] == "ghost"]
+    assert not joins
+    assert [e for e in tel.events if e["kind"] == "bootstrap"]
+
+
+def test_fast_default_link_keeps_bootstrap_instant():
+    """Unconstrained links (the legacy default) still join at the
+    scheduled block — no behavioural change for existing scenarios."""
+    sc = Scenario(
+        name="mini-instant", rounds=3, seed=9,
+        peers=(PeerSpec(uid="a"), PeerSpec(uid="b"),
+               PeerSpec(uid="late-joiner", join_round=1)))
+    eng = _engine(sc)
+    tel = eng.run()
+    join = [e for e in tel.events if e["kind"] == "join"
+            and e["detail"] == "late-joiner"]
+    assert join and join[0]["block"] == 10            # round-1 start block
+    assert not [e for e in tel.events if e["kind"] == "bootstrap"]
+
+
+# -------------------------------------------------- scenario fuzzing
+
+FUZZ_ADVERSARIES = ("lazy", "byz_noise", "byz_norm", "copycat",
+                    "copycat_noise", "late")
+
+
+def test_fuzzed_scenarios_keep_honest_majority():
+    """Sample random Scenario specs and assert the paper's survival
+    invariant — honest peers hold a majority of consensus incentive in
+    every round — for every sampled run."""
+    from repro.launch.analysis import sim_telemetry_summary
+    for seed in range(3):
+        rng = np.random.RandomState(4242 + seed)
+        n_honest = 4 + int(rng.randint(2))
+        n_adv = 1 + int(rng.randint(2))               # strictly a minority
+        peers = [PeerSpec(uid=f"h{i}",
+                          data_multiplier=1 + int(rng.rand() < 0.25))
+                 for i in range(n_honest)]
+        for i in range(n_adv):
+            b = FUZZ_ADVERSARIES[int(rng.randint(len(FUZZ_ADVERSARIES)))]
+            peers.append(PeerSpec(
+                uid=f"adv{i}", behavior=b,
+                copy_victim="h0" if b.startswith("copycat") else None))
+        if rng.rand() < 0.5:                          # some churn
+            peers.append(PeerSpec(uid="drifter", join_round=1,
+                                  leave_round=3))
+        link = LinkSpec(latency_rounds=float(0.1 * rng.rand()),
+                        jitter_rounds=float(0.1 * rng.rand()))
+        sc = Scenario(name=f"fuzz-{seed}", rounds=4, seed=seed,
+                      peers=tuple(peers), default_link=link)
+        tel = _engine(sc).run()
+        summ = sim_telemetry_summary(tel.to_dict())
+        assert summ["honest_majority_all_rounds"], (seed, summ)
+        # and the audit never flagged an honest worker
+        assert not any(uid.startswith("h") or uid == "drifter"
+                       for uid in summ["audit_flagged_peers"]), (seed, summ)
 
 
 def test_telemetry_is_deterministic_across_runs():
