@@ -34,6 +34,15 @@ def emit(name: str, rows: List[Dict[str, Any]], csv_keys: List[str]) -> None:
         json.dump(rows, f, indent=2, default=_jsonable)
 
 
+def emit_root_json(path: str, doc: Dict[str, Any]) -> None:
+    """Persist a schema-stable benchmark artifact (committed at the repo
+    root so later PRs can regress against it): sorted keys, stable
+    2-space layout, newline-terminated — diffs show value drift only."""
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, default=_jsonable)
+        f.write("\n")
+
+
 def _fmt(v) -> str:
     if isinstance(v, float):
         return f"{v:.6g}"

@@ -1,23 +1,32 @@
-"""Gauntlet round-evaluation latency vs. peer count.
+"""Gauntlet round-evaluation latency, retraces and memory vs. peer count.
 
-Measures the validator's full round pipeline (fast-filter → batched
-primary-eval → scoreboard → aggregate) at 8/16/32/64 peers and reports
+Measures the validator's full round pipeline (fast-filter → uniqueness →
+batched primary-eval → scoreboard → aggregate) at 8/16/32/64 peers and
+reports, per peer count:
 
   * wall time per round (first round = compile, then steady-state median)
   * compiled-call dispatches per round (``Validator.compiled_calls``)
+  * compile counts per jitted entry point (``Validator.trace_counts_all``)
+    — the rounds after warmup run with a *varying* |S_t| (the full set,
+    half, three quarters), and the bench asserts the static-shape padded
+    entry points add ZERO traces across that churn
+  * AOT memory analysis of the primary entry point at the round's real
+    operand shapes (``Validator.primary_memory_analysis``): peak device
+    buffer bytes of the full-vmap path (every dense delta live at once)
+    vs. the ``eval_chunk``-blocked ``lax.map`` path — the bench asserts
+    the chunked temp footprint is materially below full-vmap at the
+    largest peer count.
 
-The batched stages issue O(1) compiled calls per round — sync-scores,
-audit fingerprint, baselines, primary scores, aggregate: 5 (this bench
-builds the validator without a grad_fn, so replay audits are inactive) —
-where the per-peer loop implementation issued 4·|S_t| (+1 aggregate), so
-steady-state round latency should grow sub-linearly in the peer count
-while the dispatch count stays flat.
+The result is written as a schema-stable ``BENCH_gauntlet.json`` at the
+repo root (committed, so later PRs have a perf trajectory to regress
+against) in addition to the usual CSV/JSON emit.
 
 Peers are simulated by publishing format-valid random payloads through a
 single shared jitted compressor (real PeerNodes would add one local-step
 compile per peer, which is peer-side cost, not what this bench measures).
 
 Run:  PYTHONPATH=src python benchmarks/gauntlet_bench.py [--rounds N]
+          [--peers 8 16 32 64] [--eval-chunk 8] [--out BENCH_gauntlet.json]
 """
 from __future__ import annotations
 
@@ -26,7 +35,6 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, "benchmarks")
@@ -43,13 +51,17 @@ from repro.demo import compress                     # noqa: E402
 from repro.models import model as M                 # noqa: E402
 
 BATCH, SEQ = 2, 32
+# the five static-shape entry points whose traces must pin flat (the
+# bench validator has no grad_fn, so replay/sketch never run here)
+PINNED = ("sync_scores", "fingerprint", "baselines", "primary",
+          "aggregate")
 
 
-def build(num_peers: int, seed: int = 0):
+def build(num_peers: int, eval_chunk: int, seed: int = 0):
     cfg = tiny_config()
     hp = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=1000,
                      top_g=min(4, num_peers), eval_set_size=num_peers,
-                     demo_chunk=16, demo_topk=8)
+                     demo_chunk=16, demo_topk=8, eval_chunk=eval_chunk)
     corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=seed)
     chain = Chain(blocks_per_round=10)
     store = BucketStore(chain)
@@ -92,25 +104,60 @@ def publish_round(validator, chain, store, uids, compress_fn, rnd: int):
                                chain.block, 8)
 
 
-def bench(num_peers: int, rounds: int):
-    validator, chain, store, uids, compress_fn = build(num_peers)
+def eval_sizes(num_peers: int, rounds: int):
+    """Round 0 runs the full set (pins the sticky buckets at their
+    high-water mark); later rounds churn |S_t| and |F_t|."""
+    cycle = [num_peers, max(num_peers // 2, 1),
+             max(3 * num_peers // 4, 1)]
+    return [num_peers] + [cycle[r % len(cycle)]
+                          for r in range(rounds - 1)]
+
+
+def bench(num_peers: int, rounds: int, eval_chunk: int):
+    validator, chain, store, uids, compress_fn = build(num_peers,
+                                                       eval_chunk)
+    sizes = eval_sizes(num_peers, rounds)
     times, calls = [], []
-    for rnd in range(rounds):
+    # the shared aggregate program's jit cache is process-wide, so count
+    # this run's traces as deltas against the post-build snapshot
+    base_traces = validator.trace_counts_all()
+    warm_traces = None
+    for rnd, n_active in enumerate(sizes):
         publish_round(validator, chain, store, uids, compress_fn, rnd)
         chain.advance(chain.blocks_per_round)
+        active = uids[:n_active]
         before = validator.compiled_calls
         t0 = time.perf_counter()
-        rep = validator.run_round(rnd, uids, fast_set_size=num_peers)
+        rep = validator.run_round(rnd, active, fast_set_size=n_active)
         jax.block_until_ready(jax.tree.leaves(validator.params)[0])
         times.append((time.perf_counter() - t0) * 1e3)
         calls.append(validator.compiled_calls - before)
-        assert len(rep.evaluated) == num_peers
+        assert len(rep.evaluated) == n_active
+        if rnd == 0:
+            warm_traces = validator.trace_counts_all()
+    final_traces = validator.trace_counts_all()
+    churn_traces = {k: final_traces.get(k, 0) - warm_traces.get(k, 0)
+                    for k in PINNED}
+    # static-shape acceptance: churn must add ZERO compiles
+    assert all(v == 0 for v in churn_traces.values()), churn_traces
+    mem_full = validator.primary_memory_analysis(eval_chunk=0)
+    mem_chunked = validator.primary_memory_analysis(
+        eval_chunk=eval_chunk or 0)
     steady = sorted(times[1:]) or times
     return {"peers": num_peers, "rounds": rounds,
+            "eval_set_sizes": sizes,
             "compile_round_ms": times[0],
             "steady_round_ms": steady[len(steady) // 2],
+            "ms_per_peer": steady[len(steady) // 2] / num_peers,
             "compiled_calls_per_round": calls[-1],
-            "ms_per_peer": steady[len(steady) // 2] / num_peers}
+            "traces_per_entry": {k: final_traces.get(k, 0)
+                                 - base_traces.get(k, 0)
+                                 for k in PINNED},
+            "traces_after_warmup": churn_traces,
+            "primary_temp_bytes_full_vmap": mem_full.get("temp_bytes"),
+            "primary_temp_bytes_chunked": mem_chunked.get("temp_bytes"),
+            "primary_peak_bytes_full_vmap": mem_full.get("peak_bytes"),
+            "primary_peak_bytes_chunked": mem_chunked.get("peak_bytes")}
 
 
 def main():
@@ -118,18 +165,42 @@ def main():
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--peers", type=int, nargs="*",
                     default=[8, 16, 32, 64])
+    ap.add_argument("--eval-chunk", type=int, default=8,
+                    help="peers per fused decompress→loss block "
+                         "(0 = full vmap)")
+    ap.add_argument("--out", default="BENCH_gauntlet.json",
+                    help="schema-stable trajectory artifact "
+                         "(committed at the repo root)")
     args = ap.parse_args()
-    rows = [bench(n, args.rounds) for n in args.peers]
+    rows = [bench(n, args.rounds, args.eval_chunk) for n in args.peers]
     common.emit("gauntlet_bench", rows,
                 ["peers", "compile_round_ms", "steady_round_ms",
-                 "ms_per_peer", "compiled_calls_per_round"])
+                 "ms_per_peer", "compiled_calls_per_round",
+                 "primary_temp_bytes_full_vmap",
+                 "primary_temp_bytes_chunked"])
+    top = rows[-1]
+    if args.eval_chunk and top["peers"] > args.eval_chunk:
+        # bounded-memory acceptance at the largest peer count
+        assert (top["primary_temp_bytes_chunked"]
+                < top["primary_temp_bytes_full_vmap"]), top
+    common.emit_root_json(args.out, {
+        "benchmark": "gauntlet_bench",
+        "schema_version": 1,
+        "config": {"rounds": args.rounds, "eval_chunk": args.eval_chunk,
+                   "model": "tiny", "batch": BATCH, "seq_len": SEQ},
+        "series": rows,
+    })
     flat = {r["peers"]: r for r in rows}
     lo, hi = min(flat), max(flat)
     shrink = (flat[lo]["steady_round_ms"] / lo) / (
         flat[hi]["steady_round_ms"] / hi)
+    mem_x = (top["primary_temp_bytes_full_vmap"]
+             / max(top["primary_temp_bytes_chunked"] or 1, 1))
     print(f"\nper-peer cost {lo}→{hi} peers shrinks {shrink:.2f}x; "
           f"compiled calls/round: "
-          f"{sorted(set(r['compiled_calls_per_round'] for r in rows))}")
+          f"{sorted(set(r['compiled_calls_per_round'] for r in rows))}; "
+          f"churn retraces: 0/entry; primary temp memory at {hi} peers: "
+          f"full-vmap/chunked = {mem_x:.1f}x")
 
 
 if __name__ == "__main__":

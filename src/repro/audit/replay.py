@@ -34,23 +34,39 @@ from __future__ import annotations
 
 from typing import Callable, List
 
+import jax
+import jax.numpy as jnp
+
 from repro.demo import optimizer as demo_opt
 
 
 class ReplayAuditor:
-    """Recomputes local steps with the peers' own shared jitted program.
+    """Recomputes local steps with the peers' own shared jitted programs.
 
     Constructed by the validator when it has the training ``grad_fn``;
-    the underlying compiled program is the SAME cache entry the peers
-    use (keyed on grad_fn + tree signature in ``training.peer``), so an
-    audit adds zero extra compiles to a same-shape fleet.
+    the underlying compiled programs are shared cache entries (keyed on
+    grad_fn + tree signature in ``training.peer``), so an audit adds at
+    most one extra compile to a same-shape fleet: the scalar local step
+    IS the peers' program, and the **batched** replay
+    (:meth:`replay_batch`) is one vmapped variant of it that turns
+    cluster arbitration + spot checks into a single dispatch instead of
+    O(k) sequential local steps. The audited-peer axis is padded to a
+    sticky power-of-two bucket (rows repeat batch 0; callers slice) so
+    the batched program compiles once even as cluster sizes wobble.
     """
 
     def __init__(self, grad_fn: Callable, hp, params, metas):
-        # lazy import: training.peer imports core.gauntlet, which imports
-        # this module — binding at call-set-up time breaks the cycle
-        from repro.training.peer import shared_local_step
+        # lazy imports: training.peer and core.gauntlet both (transitively)
+        # import this module — binding at call-set-up time breaks the cycle
+        from repro.core import padding
+        from repro.training.peer import shared_local_step, \
+            shared_replay_step
         self._local = shared_local_step(grad_fn, hp, params, metas)
+        self._batched = shared_replay_step(grad_fn, hp, params, metas)
+        # replay is the most expensive padded axis (a full local step
+        # per row), so the floor stays at 2 — but the configured growth
+        # cap applies here like everywhere else
+        self._pad = padding.BucketTracker(minimum=2, cap=hp.eval_pad_cap)
 
     def replay(self, params, batches: List):
         """One recomputed payload from (replica params, assigned batches);
@@ -58,3 +74,13 @@ class ReplayAuditor:
         payload, _ = self._local(params, demo_opt.init_state(params),
                                  batches)
         return payload
+
+    def replay_batch(self, params, batches: List):
+        """Recomputed payloads for ``batches`` (one single-batch local
+        step per row) in ONE dispatch: returns a stacked payload tree
+        whose leading axis is the sticky bucket ≥ len(batches); rows
+        beyond len(batches) replay batch 0 again and must be ignored."""
+        bucket = self._pad.get("replay", len(batches))
+        padded = list(batches) + [batches[0]] * (bucket - len(batches))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *padded)
+        return self._batched(params, stacked)

@@ -215,6 +215,15 @@ class TrainConfig:
     openskill_kappa: float = 1e-4
     put_window: float = 60.0            # seconds (bucket-time units)
     tokens_per_peer: int = 400_000      # baseline script target
+    # static-shape / bounded-memory eval (core.gauntlet, core.padding):
+    # peer-count axes are padded to sticky power-of-two buckets so every
+    # jitted round entry point compiles once per run, and the primary
+    # eval optionally runs lax.map over vmap blocks of eval_chunk peers
+    # so peak live memory is O(eval_chunk x params), not O(|S_t| x params)
+    eval_chunk: int = 0                 # peers per fused block (0 = full vmap)
+    eval_pad_min: int = 4               # smallest padding bucket
+    eval_pad_cap: int = 0               # stop pow2 bucket growth here (0 = off)
+    fast_prefetch_workers: int = 4      # fast-filter bucket-read threads (0 = off)
     # proof-of-unique-work audit (repro.audit, Validator.stage_uniqueness)
     audit_enabled: bool = True          # run the uniqueness stage
     audit_fingerprint_dim: int = 256    # count-sketch width

@@ -55,20 +55,41 @@ through an explicit :class:`RoundContext` blackboard:
 reorder, drop or substitute stages (benchmarks time individual stages,
 tests drive them one at a time). ``Validator.compiled_calls`` counts
 invocations of the batched jit entry points — sync-scores, audit
-fingerprint, baselines, primary scores, aggregate (5), plus the
-replay-audit local steps, which are bounded by ``audit_spot_k`` and the
-copy-cluster size, never by |F_t| or |S_t|. The per-round dispatch count
+fingerprint, baselines, primary scores, aggregate (5), plus the batched
+replay audit (one assigned + one decoy dispatch and their sketches,
+regardless of how many peers are audited). The per-round dispatch count
 is therefore O(1) in the peer count, which
 ``benchmarks/gauntlet_bench.py`` measures at 8→64 peers (baselines drop
 to 0 on a full cache hit, partial hits recompute only missing rows).
 
-The jitted entry points retrace when the eval-set / contributor-set sizes
-change; those sizes are bounded by ``eval_set_size`` / ``top_g`` and
-stabilize after the first rounds.
+Static shapes / bounded memory
+------------------------------
+Every data-dependent axis a jitted entry point sees — the |S_t| peer
+stack, the |F_t| sync samples, the unique-batch stacks, the baseline
+missing-row vectors, the fingerprint reference window and the
+aggregation rows — is padded to a **sticky power-of-two bucket**
+(:mod:`repro.core.padding`, knobs ``hp.eval_pad_min`` /
+``hp.eval_pad_cap``) with validity masks or row counts threaded through
+the call, so each entry point compiles **once per run** even as churn
+wobbles the live sizes (``Validator.trace_counts`` /
+:meth:`Validator.trace_counts_all` count retraces; the retrace-
+regression test and ``BENCH_gauntlet.json`` pin them flat). Padded rows
+are exact no-ops: zero payloads decompress to zero deltas, masked
+scores multiply to 0.0, and zero aggregation weights turn padded
+contributions into ±0.0 adds — results are bit-identical to the
+unpadded path. With ``hp.eval_chunk`` > 0 the primary eval additionally
+runs ``lax.map`` over vmap blocks of that many peers with
+decompress→sign→step→loss fused inside each block, bounding peak live
+memory at O(eval_chunk × params) instead of materializing all |S_t|
+dense deltas at once (:meth:`Validator.primary_memory_analysis`
+measures the difference without executing).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -80,7 +101,7 @@ from repro.audit.replay import ReplayAuditor
 from repro.comms.bucket import BucketStore
 from repro.comms.chain import Chain
 from repro.configs.base import TrainConfig
-from repro.core import scores as S
+from repro.core import padding, scores as S
 from repro.core.openskill import RatingBook
 from repro.demo import compress, optimizer as demo_opt
 from repro.demo.compress import Payload
@@ -130,11 +151,15 @@ class RoundContext:
     fast_set: List[str] = dataclasses.field(default_factory=list)
     fast_pass: Dict[str, bool] = dataclasses.field(default_factory=dict)
     payloads: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    sync_samples: Dict[str, Any] = dataclasses.field(
+        default_factory=dict)   # raw prefetched sync objects (fast filter)
     # uniqueness / primary-eval → (the eval set is selected by whichever
     # of the two stages runs first; both share the stacked payloads)
     eval_set: List[str] = dataclasses.field(default_factory=list)
     eval_selected: bool = False
-    stacked_payloads: Any = None    # Payload tree, leading axis = eval order
+    # Payload tree; rows [0, len(eval_set)) follow eval order, the rest
+    # is zero padding up to the validator's sticky peer bucket
+    stacked_payloads: Any = None
     stacked_index: Dict[str, int] = dataclasses.field(default_factory=dict)
     assigned_batches: Dict[str, Any] = dataclasses.field(
         default_factory=dict)   # per-eval-peer SelectData cache
@@ -190,6 +215,12 @@ def _batch_key(batch) -> bytes:
 def _stack_batches(batches: List[Any]):
     """List of identically-shaped batch pytrees -> leading axis K."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+
+def _payload_rows(stacked) -> int:
+    """Leading (peer) axis length of a stacked payload tree."""
+    return jax.tree.leaves(
+        stacked, is_leaf=lambda x: isinstance(x, Payload))[0].vals.shape[0]
 
 
 def _unique_batches(batches: List[Any]):
@@ -298,6 +329,15 @@ class Validator:
         self.baseline_rows = 0         # unique batches actually evaluated
         self.baseline_cache = baseline_cache
         self._last_fast_check: Dict[str, int] = {}
+        # sticky power-of-two padding buckets per data-dependent axis:
+        # once a run has seen its high-water mark, every jitted entry
+        # point below holds ONE compiled shape across churn
+        self._pad = padding.BucketTracker(minimum=hp.eval_pad_min,
+                                          cap=hp.eval_pad_cap)
+        # traces per entry point: the wrapped impl bodies only run when
+        # XLA (re)traces, so these are compile counts, not dispatches
+        self.trace_counts: collections.Counter = collections.Counter()
+        self._primary_arg_spec = None  # ShapeDtypeStructs of the last call
         chain.register_validator(uid, stake)
         # ---- proof-of-unique-work audit state (repro.audit) ----
         # replay audits need the training grad_fn; without it the stage
@@ -320,44 +360,88 @@ class Validator:
             self.stage_fast_filter, self.stage_uniqueness,
             self.stage_primary_eval, self.stage_scoreboard,
             self.stage_aggregate]
-        self._primary = jax.jit(self._primary_impl)
-        self._baselines = jax.jit(self._baselines_impl)
-        self._sync_scores = jax.jit(self._sync_scores_impl)
-        self._fingerprint = jax.jit(self._fingerprint_impl)
-        self._sketch = jax.jit(self._sketch_impl)
+        self._primary = jax.jit(self._traced("primary", functools.partial(
+            self._primary_scores, hp.eval_chunk)))
+        self._baselines = jax.jit(
+            self._traced("baselines", self._baselines_impl))
+        self._sync_scores = jax.jit(
+            self._traced("sync_scores", self._sync_scores_impl))
+        self._fingerprint = jax.jit(
+            self._traced("fingerprint", self._fingerprint_impl))
+        self._sketch = jax.jit(self._traced("sketch", self._sketch_impl))
         # the SAME compiled aggregate program every peer replica uses —
         # bit-identity by construction, one compile per shape fleet-wide
         self._agg = demo_opt.shared_aggregate_apply(params, metas,
                                                     hp.demo_chunk)
 
     # ------------------------------------------------------------ pieces
-    def _baselines_impl(self, params, uniq_a, uniq_r):
-        """Baseline losses L(θ, D) for the round's unique assigned and
-        unassigned batches (separate stacks — their shapes may differ),
-        in one compiled call. This is the part of primary eval that is
+    def _traced(self, name: str, fn: Callable) -> Callable:
+        """Wrap a jit impl so its Python body bumps ``trace_counts`` —
+        the body only executes when XLA (re)traces, so the counter is
+        the compile count for that entry point (the retrace-regression
+        test and the bench assert it stays flat across churn)."""
+        def wrapped(*args):
+            self.trace_counts[name] += 1
+            return fn(*args)
+        return wrapped
+
+    def _baselines_impl(self, params, uniq_a, uniq_r, rows_a, rows_r):
+        """Baseline losses L(θ, D) for the requested rows of the round's
+        padded unique assigned / unassigned batch stacks (separate
+        stacks — their shapes may differ), in one compiled call. The row
+        vectors are padded to the same sticky bucket as the stacks, so
+        this entry point keeps one shape while the missing-row count
+        wobbles with cache hits; padded rows re-score row 0 and are
+        sliced away host-side. This is the part of primary eval that is
         identical across redundant validators, hence its own jit entry
         point (skippable on a :class:`BaselineCache` hit)."""
-        base_a = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_a)
-        base_r = jax.vmap(lambda b: self.eval_loss(params, b))(uniq_r)
+        sel_a = jax.tree.map(lambda u: u[rows_a], uniq_a)
+        sel_r = jax.tree.map(lambda u: u[rows_r], uniq_r)
+        base_a = jax.vmap(lambda b: self.eval_loss(params, b))(sel_a)
+        base_r = jax.vmap(lambda b: self.eval_loss(params, b))(sel_r)
         return base_a, base_r
 
-    def _primary_impl(self, params, stacked, uniq_a, uniq_r,
-                      idx_a, idx_r, base_a, base_r, beta):
-        """One compiled call for the whole of S_t: vmapped signed deltas
-        and vmapped stepped losses (eq. 2) against precomputed baselines.
+    def _primary_scores(self, chunk, params, stacked, uniq_a, uniq_r,
+                        idx_a, idx_r, base_a, base_r, beta, valid):
+        """One compiled call for the whole (padded) eval stack: signed
+        deltas and stepped losses (eq. 2) against precomputed baselines.
 
         Only the *unique* batches are staged to the device; the per-peer
         views (and their baselines) are gathered via idx_a/idx_r inside
-        the trace."""
-        deltas = jax.vmap(
-            lambda pl: demo_opt.single_peer_delta(pl, self.metas))(stacked)
-        batches_a = jax.tree.map(lambda u: u[idx_a], uniq_a)
-        batches_r = jax.tree.map(lambda u: u[idx_r], uniq_r)
-        s_a = S.batched_loss_scores(self.eval_loss, params, deltas,
-                                    batches_a, beta, baseline=base_a[idx_a])
-        s_r = S.batched_loss_scores(self.eval_loss, params, deltas,
-                                    batches_r, beta, baseline=base_r[idx_r])
-        return s_a, s_r
+        the trace, and ``valid`` zeroes the padded rows' scores.
+
+        ``chunk`` is static. 0 vmaps the whole peer axis at once —
+        every dense params-sized delta is live simultaneously. > 0 runs
+        ``lax.map`` over vmap blocks of ``chunk`` peers with
+        decompress→sign→step→loss fused inside each block, so at most
+        ``chunk`` dense deltas exist at any point: peak live memory is
+        O(chunk × params) instead of O(|S_t| × params)
+        (:meth:`primary_memory_analysis` measures both)."""
+        def block(pl, ia, ir, vm):
+            deltas = jax.vmap(
+                lambda q: demo_opt.single_peer_delta(q, self.metas))(pl)
+            s_a = S.batched_loss_scores(
+                self.eval_loss, params, deltas,
+                jax.tree.map(lambda u: u[ia], uniq_a), beta,
+                baseline=base_a[ia], valid=vm)
+            s_r = S.batched_loss_scores(
+                self.eval_loss, params, deltas,
+                jax.tree.map(lambda u: u[ir], uniq_r), beta,
+                baseline=base_r[ir], valid=vm)
+            return s_a, s_r
+
+        peers = idx_a.shape[0]
+        if chunk and chunk < peers:
+            blocks = peers // chunk
+
+            def part(x):
+                return x.reshape((blocks, chunk) + x.shape[1:])
+            s_a, s_r = jax.lax.map(
+                lambda xs: block(*xs),
+                (jax.tree.map(part, stacked), part(idx_a), part(idx_r),
+                 part(valid)))
+            return s_a.reshape(peers), s_r.reshape(peers)
+        return block(stacked, idx_a, idx_r, valid)
 
     def _fingerprint_impl(self, stacked, ref):
         """One compiled call for the whole uniqueness fingerprint: sketch
@@ -387,6 +471,34 @@ class Validator:
         if peer not in self.peer_state:
             self.peer_state[peer] = PeerState()
         return self.peer_state[peer]
+
+    def trace_counts_all(self) -> Dict[str, int]:
+        """Compile counts per jitted entry point. The fleet-shared
+        aggregate program cannot be wrapped (validator and peers fetch
+        the same callable), so it reports its jit-cache size — every
+        shape it has been compiled for, process-wide."""
+        out = dict(self.trace_counts)
+        out["aggregate"] = self._agg._cache_size()
+        return out
+
+    def primary_memory_analysis(
+            self, eval_chunk: Optional[int] = None) -> Dict[str, int]:
+        """AOT memory footprint of the primary entry point at the last
+        round's operand shapes: lower + compile (no execution, no data)
+        and read XLA's buffer assignment. ``eval_chunk`` overrides the
+        configured chunking so benchmarks can compare the full-vmap and
+        chunked peaks on identical operands. ``temp_bytes`` is the
+        number to watch — it carries the live dense deltas."""
+        if self._primary_arg_spec is None:
+            return {}
+        chunk = self.hp.eval_chunk if eval_chunk is None else eval_chunk
+        fn = jax.jit(functools.partial(self._primary_scores, chunk))
+        ma = fn.lower(*self._primary_arg_spec).compile().memory_analysis()
+        temp = int(ma.temp_size_in_bytes)
+        args = int(ma.argument_size_in_bytes)
+        outs = int(ma.output_size_in_bytes)
+        return {"temp_bytes": temp, "argument_bytes": args,
+                "output_bytes": outs, "peak_bytes": temp + args + outs}
 
     def lr_at(self, step: Optional[int] = None) -> float:
         return float(warmup_cosine(step if step is not None else self.step,
@@ -442,20 +554,61 @@ class Validator:
 
     def _sync_sample(self, ctx: RoundContext, peer: str,
                      sync_ref: np.ndarray) -> Optional[np.ndarray]:
-        """Fetch + validate the peer's published sync sample. A missing OR
-        malformed sample (wrong shape/dtype) is the peer's failure, never
-        the round's — Byzantine peers must not be able to abort evaluation
-        for everyone else — so any problem degrades to None."""
+        """Fetch + validate the peer's published sync sample (served from
+        the context's prefetch cache when the fast filter overlapped the
+        bucket reads). A missing OR malformed sample (wrong shape/dtype)
+        is the peer's failure, never the round's — Byzantine peers must
+        not be able to abort evaluation for everyone else — so any
+        problem degrades to None."""
         try:
-            rk = self.chain.peers[peer].bucket_read_key
-            sample, _ = self.store.buckets[peer].get(
-                f"sync/round-{ctx.round_idx:08d}", rk)
+            sample = ctx.sync_samples.get(peer)
+            if sample is None:
+                rk = self.chain.peers[peer].bucket_read_key
+                sample, _ = self.store.buckets[peer].get(
+                    f"sync/round-{ctx.round_idx:08d}", rk)
             arr = np.asarray(sample, np.float32)
         except Exception:
             return None
         if arr.shape != np.asarray(sync_ref).shape:
             return None
         return arr
+
+    def _prefetch_reads(self, ctx: RoundContext,
+                        peers: List[str]) -> None:
+        """Overlap the fast filter's per-peer bucket reads (payload +
+        sync sample) with a small thread pool for large F_t. Threads
+        only perform the raw store reads; every decision that consumes
+        them runs on the main thread in fast-set order, so the outcome
+        is identical to the sequential path (ROADMAP async-prefetch
+        follow-up)."""
+        workers = self.hp.fast_prefetch_workers
+        targets = [p for p in peers if p not in ctx.payloads]
+        if workers <= 1 or len(targets) < 2 * workers:
+            return
+        sync_key = f"sync/round-{ctx.round_idx:08d}"
+
+        def read(peer):
+            payload = sample = None
+            try:
+                rk = self.chain.peers[peer].bucket_read_key
+                payload, _ = self.store.get_gradient(peer, ctx.round_idx,
+                                                     rk)
+            except Exception:
+                payload = None
+            try:
+                rk = self.chain.peers[peer].bucket_read_key
+                sample, _ = self.store.buckets[peer].get(sync_key, rk)
+            except Exception:
+                sample = None
+            return payload, sample
+
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            fetched = list(ex.map(read, targets))
+        for peer, (payload, sample) in zip(targets, fetched):
+            if payload is not None:
+                ctx.payloads.setdefault(peer, payload)
+            if sample is not None:
+                ctx.sync_samples.setdefault(peer, sample)
 
     def _fast_check(self, ctx: RoundContext, peer: str,
                     sync_ref: np.ndarray) -> bool:
@@ -519,8 +672,10 @@ class Validator:
                     + pool[:max(0, fast_n - len(self.current_top_g))])
         sync_ref = S.sample_params_for_sync(
             self.params, jax.random.PRNGKey(ctx.round_idx))
-        # host-side per peer: bucket reads + format checks; the sync-score
+        # host-side per peer: bucket reads + format checks (reads overlap
+        # via the thread-pool prefetch for large F_t); the sync-score
         # math itself is batched below into one compiled call for all of F_t
+        self._prefetch_reads(ctx, fast_set)
         samples, sampled_peers = [], []
         for peer in fast_set:
             if not self._precheck(ctx, peer):
@@ -531,13 +686,12 @@ class Validator:
                 sampled_peers.append(peer)
         passed: Dict[str, bool] = {}
         if samples:
-            # pad rows to the next power of two: the sample count varies
+            # pad rows to the sticky bucket: the sample count varies
             # round to round under churn/lossy networks, and an exact-K
             # shape would retrace every time it changes
             k = len(samples)
-            mat = np.zeros((1 << (k - 1).bit_length() if k > 1 else 1,
-                            samples[0].size), np.float32)
-            mat[:k] = np.stack(samples)
+            mat = padding.pad_rows(samples, samples[0].size,
+                                   bucket=self._pad.get("sync", k))
             scores = np.asarray(self._sync_scores(
                 jnp.asarray(sync_ref), jnp.asarray(mat),
                 jnp.float32(self.lr_at())))[:k]
@@ -597,21 +751,24 @@ class Validator:
                     self._assigned_batch(ctx, p))
                 if committed != expected:
                     flagged[p] = "commit_mismatch"
-            # (2) fingerprints: ONE compiled call sketches the whole eval
-            # stack and compares it against itself + the recent-rounds
-            # reference window
+            # (2) fingerprints: ONE compiled call sketches the whole
+            # (padded) eval stack and compares it against itself + the
+            # recent-rounds reference window. The reference is padded to
+            # AUDIT_REF_ROUNDS x the sticky peer bucket — its capacity,
+            # not its occupancy — so the entry point never retraces as
+            # the window fills or the eval set wobbles.
+            k = len(ctx.eval_set)
+            rows = _payload_rows(ctx.stacked_payloads)
             prev_uids = [u for uids, _ in self._prev_sketches for u in uids]
-            pad = 1 << max(len(prev_uids) - 1, 0).bit_length() \
-                if len(prev_uids) > 1 else 1
-            ref = np.zeros((pad, hp.audit_fingerprint_dim), np.float32)
-            if prev_uids:
-                ref[:len(prev_uids)] = np.concatenate(
-                    [arr for _, arr in self._prev_sketches])
+            ref = padding.pad_rows(
+                [row for _, arr in self._prev_sketches for row in arr],
+                hp.audit_fingerprint_dim, bucket=AUDIT_REF_ROUNDS * rows)
             sk, cur, prev = self._fingerprint(ctx.stacked_payloads,
                                               jnp.asarray(ref))
             self.compiled_calls += 1
-            sk = np.asarray(sk)
-            cur, prev = np.asarray(cur), np.asarray(prev)
+            sk = np.asarray(sk)[:k]
+            cur = np.asarray(cur)[:k, :k]
+            prev = np.asarray(prev)[:k]
             thr = hp.audit_similarity_threshold
             # a cross-round match makes a peer a delayed-copy SUSPECT;
             # the verdict goes through replay arbitration below (never
@@ -645,23 +802,26 @@ class Validator:
             # cos(payload, replay(decoy)). Self-normalizing — both terms
             # decay together as error feedback accumulates, but only the
             # peer that actually trained on its assignment keeps a gap.
+            # All audited peers replay in TWO batched dispatches (one
+            # per batch shape: assigned stack, decoy stack) instead of
+            # O(k) sequential local steps (ROADMAP PR-3 follow-up).
             replay_margin: Dict[str, float] = {}
             if self._replayer is not None and targets:
-                reps = [self._replayer.replay(
-                    self.params, [self._assigned_batch(ctx, p)])
-                    for p in targets]
-                reps += [self._replayer.replay(
-                    self.params, [self._unassigned_batch(ctx, p)])
-                    for p in targets]
-                self.compiled_calls += len(reps)
-                rsk = np.asarray(self._sketch(
-                    compress.stack_payloads(reps)))
-                self.compiled_calls += 1
+                reps_a = self._replayer.replay_batch(
+                    self.params,
+                    [self._assigned_batch(ctx, p) for p in targets])
+                reps_d = self._replayer.replay_batch(
+                    self.params,
+                    [self._unassigned_batch(ctx, p) for p in targets])
+                self.compiled_calls += 2
+                rsk_a = np.asarray(self._sketch(reps_a))
+                rsk_d = np.asarray(self._sketch(reps_d))
+                self.compiled_calls += 2
                 for i, p in enumerate(targets):
                     row = sk[ctx.stacked_index[p]]
                     replay_margin[p] = (
-                        fingerprint.cosine(row, rsk[i])
-                        - fingerprint.cosine(row, rsk[len(targets) + i]))
+                        fingerprint.cosine(row, rsk_a[i])
+                        - fingerprint.cosine(row, rsk_d[i]))
             for p in delayed:
                 # the suspect is a copy unless its payload matches a
                 # replay of its own assignment (the honest victim does;
@@ -735,8 +895,14 @@ class Validator:
         ctx.eval_set = eval_set
         if not eval_set:
             return
-        ctx.stacked_payloads = compress.stack_payloads(
-            [ctx.payloads[p] for p in eval_set])
+        # pad the peer axis to the sticky bucket (a multiple of
+        # eval_chunk so the chunked primary eval divides evenly): every
+        # jitted consumer of the stack sees one pinned shape under churn
+        bucket = self._pad.get("peers", len(eval_set),
+                               multiple=max(hp.eval_chunk, 1))
+        ctx.stacked_payloads = compress.pad_payloads(
+            compress.stack_payloads([ctx.payloads[p] for p in eval_set]),
+            bucket)
         ctx.stacked_index = {p: i for i, p in enumerate(eval_set)}
 
     def _assigned_batch(self, ctx: RoundContext, peer: str):
@@ -758,8 +924,12 @@ class Validator:
     def _resolve_baselines(self, ukeys: List[bytes], na: int, ua, ur):
         """Baseline losses for the round's unique batches, reusing the
         cross-validator cache per key: only the *missing* batches are
-        evaluated, by slicing the unique-batch stacks down to the misses
-        (ROADMAP partial-reuse follow-up — all-or-nothing before)."""
+        evaluated, by gathering just the missed rows of the (padded)
+        unique-batch stacks inside the compiled call (ROADMAP
+        partial-reuse follow-up — all-or-nothing before). The returned
+        per-stack baseline vectors are zero-padded to the stacks' bucket
+        so the primary entry point's shapes stay pinned."""
+        bucket = jax.tree.leaves(ua)[0].shape[0]
         vals = np.full(len(ukeys), np.nan, np.float64)
         if self.baseline_cache is not None:
             found = self.baseline_cache.lookup_partial(self.step, ukeys)
@@ -768,24 +938,28 @@ class Validator:
                     vals[i] = found[k]
         missing = [i for i in range(len(ukeys)) if np.isnan(vals[i])]
         if missing:
-            rows_a = np.asarray([i for i in missing if i < na], np.int32)
-            rows_r = np.asarray([i - na for i in missing if i >= na],
-                                np.int32)
-            ua_m = jax.tree.map(lambda u: u[rows_a], ua)
-            ur_m = jax.tree.map(lambda u: u[rows_r], ur)
-            got_a, got_r = self._baselines(self.params, ua_m, ur_m)
+            ma = [i for i in missing if i < na]
+            mr = [i - na for i in missing if i >= na]
+            rows_a = padding.pad_index(np.asarray(ma, np.int32), bucket)
+            rows_r = padding.pad_index(np.asarray(mr, np.int32), bucket)
+            got_a, got_r = self._baselines(self.params, ua, ur,
+                                           jnp.asarray(rows_a),
+                                           jnp.asarray(rows_r))
             self.compiled_calls += 1
             self.baseline_calls += 1
             self.baseline_rows += len(missing)
-            got = np.concatenate([np.asarray(got_a, np.float64),
-                                  np.asarray(got_r, np.float64)])
+            got = np.concatenate([np.asarray(got_a, np.float64)[:len(ma)],
+                                  np.asarray(got_r, np.float64)[:len(mr)]])
             vals[missing] = got
             if (self.baseline_cache is not None
                     and self.chain.checkpoint_pointer == self.uid):
                 self.baseline_cache.publish(
                     self.step, [ukeys[i] for i in missing], got)
-        return (jnp.asarray(vals[:na], jnp.float32),
-                jnp.asarray(vals[na:], jnp.float32))
+        base_a = np.zeros(bucket, np.float32)
+        base_a[:na] = vals[:na]
+        base_r = np.zeros(bucket, np.float32)
+        base_r[:len(ukeys) - na] = vals[na:]
+        return jnp.asarray(base_a), jnp.asarray(base_r)
 
     def stage_primary_eval(self, ctx: RoundContext) -> RoundContext:
         """Batched LossScore over S_t — one compiled call per round."""
@@ -799,15 +973,29 @@ class Validator:
         batches_r = [self._unassigned_batch(ctx, p) for p in eval_set]
         uniq_a, idx_a, keys_a = _unique_batches(batches_a)
         uniq_r, idx_r, keys_r = _unique_batches(batches_r)
-        ua, ur = _stack_batches(uniq_a), _stack_batches(uniq_r)
         na, ukeys = len(uniq_a), keys_a + keys_r
+        # pad the unique-batch stacks to one sticky bucket (rows repeat
+        # batch 0 — valid inputs whose outputs are never gathered) and
+        # the per-peer index/mask vectors to the peer bucket, so primary
+        # + baselines hold one compiled shape as the dedup count wobbles
+        bucket_u = self._pad.get("uniq", max(na, len(uniq_r)))
+        ua = padding.pad_axis0(_stack_batches(uniq_a), bucket_u, edge=True)
+        ur = padding.pad_axis0(_stack_batches(uniq_r), bucket_u, edge=True)
         base_a, base_r = self._resolve_baselines(ukeys, na, ua, ur)
-        s_a, s_r = self._primary(
-            self.params, ctx.stacked_payloads, ua, ur,
-            jnp.asarray(idx_a), jnp.asarray(idx_r), base_a, base_r,
-            jnp.float32(beta))
+        n = len(eval_set)
+        rows = _payload_rows(ctx.stacked_payloads)
+        valid = np.zeros(rows, np.float32)
+        valid[:n] = 1.0
+        args = (self.params, ctx.stacked_payloads, ua, ur,
+                jnp.asarray(padding.pad_index(idx_a, rows)),
+                jnp.asarray(padding.pad_index(idx_r, rows)),
+                base_a, base_r, jnp.float32(beta), jnp.asarray(valid))
+        self._primary_arg_spec = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                           jnp.asarray(x).dtype), args)
+        s_a, s_r = self._primary(*args)
         self.compiled_calls += 1
-        s_a, s_r = np.asarray(s_a), np.asarray(s_r)
+        s_a, s_r = np.asarray(s_a)[:n], np.asarray(s_r)[:n]
         for i, p in enumerate(eval_set):
             ctx.loss_scores_assigned[p] = float(s_a[i])
             ctx.loss_scores_rand[p] = float(s_r[i])
@@ -886,11 +1074,21 @@ class Validator:
                         if pl is not None]
             if not payloads:
                 return ctx
-            stacked = compress.stack_payloads(payloads)
+            stacked = compress.pad_payloads(
+                compress.stack_payloads(payloads),
+                self._pad.get("agg_stack", len(payloads)))
             rows = list(range(len(payloads)))
-        self.params = self._agg(self.params, stacked,
-                                jnp.asarray(rows, jnp.int32),
-                                jnp.float32(ctx.lr))
+        # pad the contributor rows to the sticky bucket with zero-weight
+        # row-0 gathers: exact no-op contributions, one compiled shape
+        n = len(rows)
+        bucket = self._pad.get("agg", n)
+        weights = np.zeros(bucket, np.float32)
+        weights[:n] = 1.0 / n
+        self.params = self._agg(
+            self.params, stacked,
+            jnp.asarray(padding.pad_index(np.asarray(rows, np.int32),
+                                          bucket)),
+            jnp.float32(ctx.lr), jnp.asarray(weights))
         self.compiled_calls += 1
         self.step += 1
         return ctx

@@ -1,0 +1,115 @@
+"""Static-shape padding for the validator's jitted round entry points.
+
+The Gauntlet hot path is a handful of jitted programs whose operand
+shapes are set by *who showed up this round*: |S_t| peers in the eval
+stack, |F_t| sync samples, the unique-batch count, the contributor rows
+fed to the aggregator. Under churn those sizes wobble every round, and
+an exact-shape trace retraces with them — compile time dwarfs the round
+math long before a big model does.
+
+The fix is the classic one: round every data-dependent axis up to a
+*bucket* (power-of-two growth, optionally capped), thread a validity
+mask / row count through the call, and slice the padded results back
+down on the host. Buckets are **sticky** per axis (:class:`BucketTracker`)
+— they only grow, so once a run has seen its high-water mark every entry
+point is pinned to one compiled shape. Padding rows are constructed so
+they contribute *exactly zero*: zero payloads decompress to zero deltas,
+zero sketch rows cosine to 0, and zero aggregation weights multiply out
+to ±0.0 adds — bit-level no-ops on every accumulator.
+
+The cost is bounded compute waste: a power-of-two bucket evaluates at
+most 2x the live rows (the padded remainder recomputes row 0), in
+exchange for exactly one trace per entry point for the rest of the run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pow2_bucket(n: int, minimum: int = 1, multiple: int = 1,
+                cap: int = 0) -> int:
+    """Smallest power-of-two bucket holding ``n`` rows.
+
+    ``minimum`` floors the bucket (small rounds share one shape),
+    ``multiple`` rounds the result up to a divisibility constraint (the
+    chunked primary eval needs the peer axis divisible by ``eval_chunk``),
+    and ``cap`` (> 0) stops power-of-two growth — above it the bucket
+    tracks ``n`` exactly (still ``multiple``-aligned), trading retraces
+    for memory once a run outgrows its configured ceiling.
+    """
+    n = max(int(n), 1)
+    bucket = 1 << (max(n, minimum) - 1).bit_length()
+    if cap and bucket > cap:
+        bucket = max(n, cap)
+    if multiple > 1:
+        bucket = -(-bucket // multiple) * multiple
+    return bucket
+
+
+class BucketTracker:
+    """Sticky per-axis buckets: monotone non-decreasing, so every jitted
+    entry point settles on ONE compiled shape once the run has seen its
+    high-water mark (a shrinking round reuses the larger trace)."""
+
+    def __init__(self, minimum: int = 1, cap: int = 0):
+        self.minimum = minimum
+        self.cap = cap
+        self._sizes: Dict[str, int] = {}
+
+    def get(self, axis: str, n: int, multiple: int = 1) -> int:
+        bucket = max(self._sizes.get(axis, 0),
+                     pow2_bucket(n, self.minimum, multiple, self.cap))
+        self._sizes[axis] = bucket
+        return bucket
+
+    def peek(self, axis: str) -> int:
+        return self._sizes.get(axis, 0)
+
+
+def pad_rows(rows: Sequence[np.ndarray], width: int,
+             bucket: Optional[int] = None,
+             dtype=np.float32) -> np.ndarray:
+    """Stack host-side row vectors into a zero-padded (bucket, width)
+    matrix — the one idiom behind the sync-sample and fingerprint-
+    reference staging (previously two inline copies)."""
+    n = len(rows)
+    if bucket is None:
+        bucket = pow2_bucket(n)
+    out = np.zeros((max(bucket, n), width), dtype)
+    for i, r in enumerate(rows):
+        out[i] = r
+    return out
+
+
+def pad_index(idx: np.ndarray, bucket: int, fill: int = 0) -> np.ndarray:
+    """Pad a 1-D host index vector to ``bucket`` entries with ``fill``
+    (a valid row, so padded gathers stay in bounds; their results are
+    masked or sliced away)."""
+    idx = np.asarray(idx, np.int32)
+    out = np.full(bucket, fill, np.int32)
+    out[:idx.shape[0]] = idx
+    return out
+
+
+def pad_axis0(tree, total: int, edge: bool = False):
+    """Pad every array leaf of a pytree to ``total`` rows along axis 0.
+
+    ``edge=False`` appends zeros (payload stacks: a zero payload
+    decompresses to a zero delta and sketches to a zero row).
+    ``edge=True`` repeats row 0 (batch stacks: padded rows must still be
+    *valid* model inputs — their outputs are sliced or masked away).
+    """
+    def pad_leaf(x):
+        n = x.shape[0]
+        if n >= total:
+            return x
+        if edge:
+            fill = jnp.broadcast_to(x[:1], (total - n,) + x.shape[1:])
+        else:
+            fill = jnp.zeros((total - n,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, fill], axis=0)
+    return jax.tree.map(pad_leaf, tree)

@@ -41,22 +41,28 @@ def loss_score(eval_loss_fn, params, delta, data_batch, beta: float):
 
 
 def batched_loss_scores(eval_loss_fn, params, deltas, batches, beta,
-                        baseline=None):
+                        baseline=None, valid=None):
     """Eq. 2 vmapped over a leading peer axis K.
 
     ``deltas``: params-like pytree with (K, ...) leaves; ``batches``: batch
     pytree with (K, ...) leaves. ``baseline`` optionally supplies per-peer
     L(θ, D) values (K,) already computed — the validator deduplicates
     baselines per *unique* batch and gathers them back, so peers sharing a
-    batch never recompute it. Returns (K,) fp32 LossScores.
+    batch never recompute it. ``valid`` is an optional (K,) 0/1 mask for
+    static-shape padding: masked rows score exactly 0.0 instead of
+    whatever their padded delta/batch evaluates to. Returns (K,) fp32
+    LossScores.
     """
     if baseline is None:
         baseline = jax.vmap(lambda b: eval_loss_fn(params, b))(batches)
     after = jax.vmap(
         lambda d, b: eval_loss_fn(stepped_params(params, d, beta), b)
     )(deltas, batches)
-    return (jnp.asarray(baseline, jnp.float32)
-            - jnp.asarray(after, jnp.float32))
+    scores = (jnp.asarray(baseline, jnp.float32)
+              - jnp.asarray(after, jnp.float32))
+    if valid is not None:
+        scores = scores * jnp.asarray(valid, jnp.float32)
+    return scores
 
 
 def poc_update_batched(mu, score_assigned, score_rand, gamma: float):

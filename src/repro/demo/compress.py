@@ -54,6 +54,24 @@ def stack_payloads(payload_trees: Sequence[Any]):
         *payload_trees, is_leaf=lambda x: isinstance(x, Payload))
 
 
+def pad_payloads(stacked, total: int):
+    """Pad the leading peer axis of a stacked payload tree to ``total``
+    rows with zero payloads (vals 0.0, idx 0 — a valid index, and the
+    zero coefficients decompress to an exactly-zero delta). The static-
+    shape round pipeline pads |S_t| to a sticky bucket so the jitted
+    entry points compile once; padded rows are masked or sliced away."""
+    return jax.tree.map(
+        lambda p: Payload(
+            vals=jnp.concatenate(
+                [p.vals, jnp.zeros((total - p.vals.shape[0],)
+                                   + p.vals.shape[1:], p.vals.dtype)]),
+            idx=jnp.concatenate(
+                [p.idx, jnp.zeros((total - p.idx.shape[0],)
+                                  + p.idx.shape[1:], p.idx.dtype)]))
+        if p.vals.shape[0] < total else p,
+        stacked, is_leaf=lambda x: isinstance(x, Payload))
+
+
 def take_payloads(stacked, rows):
     """Select ``rows`` along the leading peer axis of a stacked payload
     tree (traceable — the validator reuses its already-stacked eval-set

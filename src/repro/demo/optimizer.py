@@ -114,7 +114,7 @@ def apply_update(params, delta, lr, weight_decay: float = 0.0):
     return jax.tree.map(upd, params, delta)
 
 
-def aggregate_apply(params, stacked, rows, lr, metas, *,
+def aggregate_apply(params, stacked, rows, lr, weights=None, *, metas,
                     normalize: bool = True, apply_sign: bool = True):
     """One fused coordinated-update step: gather ``rows`` (peer indices)
     from the stacked payloads, aggregate (Algo 2) and apply θ ← θ − α·Δ.
@@ -122,10 +122,16 @@ def aggregate_apply(params, stacked, rows, lr, metas, *,
     Validator and peers both jit this exact function (with metas bound),
     so every replica runs the same compiled program and stays bit-identical.
     ``rows`` lets the validator reuse its already-stacked eval-set payloads
-    for top-G aggregation without re-fetching or re-stacking.
+    for top-G aggregation without re-fetching or re-stacking. ``weights``
+    (len(rows),) supports static-shape padding: callers pad ``rows`` to a
+    fixed bucket and zero the padded entries' weights, which multiply
+    every padded contribution down to exact ±0.0 adds — the aggregate is
+    bit-identical to the unpadded call. None keeps the uniform 1/K
+    default.
     """
     sub = compress.take_payloads(stacked, rows)
-    delta = aggregate(sub, metas, normalize=normalize, apply_sign=apply_sign)
+    delta = aggregate(sub, metas, weights=weights, normalize=normalize,
+                      apply_sign=apply_sign)
     return apply_update(params, delta, lr)
 
 

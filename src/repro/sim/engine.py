@@ -333,8 +333,14 @@ class SimEngine:
                       hp=None, *, batch: int = 4, seq_len: int = 64,
                       eval_batch: int = 8,
                       eval_every: Optional[int] = None,
-                      blocks_per_round: int = 10) -> "SimEngine":
-        """Wire a complete testnet from a declarative scenario."""
+                      blocks_per_round: int = 10,
+                      eval_chunk: int = 0) -> "SimEngine":
+        """Wire a complete testnet from a declarative scenario.
+
+        ``eval_chunk`` (ignored when ``hp`` is supplied) bounds each
+        validator's primary-eval memory to that many dense deltas at a
+        time — the knob for running wide eval sets on small validator
+        hardware (see ``hp.eval_chunk``)."""
         from repro.configs.base import TrainConfig
         from repro.configs.registry import tiny_config
         from repro.data import pipeline
@@ -348,7 +354,8 @@ class SimEngine:
             total_steps=max(100, scenario.rounds),
             top_g=scenario.top_g or max(3, n_specs // 2),
             eval_set_size=scenario.eval_set_size or n_specs,
-            demo_chunk=16, demo_topk=8, poc_gamma=0.6)
+            demo_chunk=16, demo_topk=8, poc_gamma=0.6,
+            eval_chunk=eval_chunk)
         corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=scenario.seed)
         chain = Chain(blocks_per_round=blocks_per_round,
                       genesis_seed=scenario.seed)

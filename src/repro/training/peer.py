@@ -41,7 +41,7 @@ from repro.audit import assignment
 from repro.comms.bucket import BucketStore
 from repro.comms.chain import Chain
 from repro.configs.base import TrainConfig
-from repro.core import byzantine, scores as S
+from repro.core import byzantine, padding, scores as S
 from repro.core.gauntlet import eligible_contributors
 from repro.demo import compress, optimizer as demo_opt
 
@@ -113,6 +113,40 @@ def shared_local_step(grad_fn: Callable, hp: TrainConfig, params,
     return fn
 
 
+def shared_replay_step(grad_fn: Callable, hp: TrainConfig, params,
+                       metas) -> Callable:
+    """One jitted **vmapped** replay program per (grad_fn, tree
+    structure, chunk, k): ``(params, batches_with_leading_K)`` — one
+    gradient + DeMo compression per row, zero error-feedback state.
+
+    This is the batched form of the replay audit's local step
+    (``repro.audit.replay.ReplayAuditor``): cluster arbitration + spot
+    checks across all audited peers become ONE dispatch instead of O(k)
+    sequential local-step calls. Cached alongside the scalar program so
+    a fleet of same-shape validators compiles it once.
+    """
+    key = ("replay", hp.demo_beta, hp.demo_chunk, hp.demo_topk,
+           *demo_opt.tree_signature(params))
+    per_grad = _LOCAL_JIT_CACHE.setdefault(grad_fn, {})
+    fn = per_grad.get(key)
+    if fn is None:
+        grad_ref = weakref.ref(grad_fn)
+
+        def impl(params, batches):
+            gf = grad_ref()
+            assert gf is not None, "grad_fn was garbage-collected"
+            state = demo_opt.init_state(params)
+
+            def one(b):
+                payload, _ = demo_opt.local_step(
+                    gf(params, b), state, beta=hp.demo_beta,
+                    chunk=hp.demo_chunk, k=hp.demo_topk, metas=metas)
+                return payload
+            return jax.vmap(one)(batches)
+        fn = per_grad[key] = jax.jit(impl)
+    return fn
+
+
 class PeerNode:
     def __init__(self, pc: PeerConfig, params, metas, grad_fn: Callable,
                  hp: TrainConfig, chain: Chain, store: BucketStore,
@@ -135,6 +169,10 @@ class PeerNode:
         self._local = shared_local_step(grad_fn, hp, params, metas)
         self._agg = demo_opt.shared_aggregate_apply(params, metas,
                                                     hp.demo_chunk)
+        # sticky contributor-axis bucket, like the validator's: the
+        # shared aggregate program holds one shape as top-G wobbles
+        self._agg_pad = padding.BucketTracker(minimum=hp.eval_pad_min,
+                                              cap=hp.eval_pad_cap)
 
     def set_behavior(self, behavior: str, at_round: int) -> None:
         """Adversary-schedule hook: flip behaviour mid-run.
@@ -262,7 +300,15 @@ class PeerNode:
                 continue
         if not payloads:
             return
-        stacked = compress.stack_payloads(payloads)
-        rows = jnp.arange(len(payloads), dtype=jnp.int32)
+        # static-shape aggregation: pad the contributor axis to a bucket
+        # with zero payloads + zero weights (exact no-op rows) so the
+        # fleet-shared compiled program pins to one shape under churn
+        n = len(payloads)
+        bucket = self._agg_pad.get("agg", n)
+        stacked = compress.pad_payloads(
+            compress.stack_payloads(payloads), bucket)
+        rows = jnp.arange(bucket, dtype=jnp.int32)
+        weights = jnp.asarray(
+            np.r_[np.full(n, 1.0 / n), np.zeros(bucket - n)], jnp.float32)
         self.params = self._agg(self.params, stacked, rows,
-                                jnp.float32(lr))
+                                jnp.float32(lr), weights)
