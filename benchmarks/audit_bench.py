@@ -23,6 +23,7 @@ Run:  PYTHONPATH=src python benchmarks/audit_bench.py [--rounds N]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -41,8 +42,10 @@ HONEST = [f"worker-{i}" for i in range(5)]
 RING = ["ring-verbatim", "ring-delayed", "ring-noise"]
 
 
-def run_ring(seed: int, rounds: int, audit: bool):
-    sc = get_scenario("copycat_ring", rounds=rounds, seed=seed)
+def run_ring(seed: int, rounds: int, audit: bool, scheme: str = "demo"):
+    sc = dataclasses.replace(
+        get_scenario("copycat_ring", rounds=rounds, seed=seed),
+        scheme=scheme)
     engine = SimEngine.from_scenario(sc, tiny_config(), batch=2,
                                      seq_len=32)
     v = list(engine.validators.values())[0]
@@ -80,13 +83,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--seeds", type=int, nargs="*", default=[0, 1, 2])
+    ap.add_argument("--scheme", default="demo",
+                    help="gradient scheme (repro.schemes registry name) "
+                         "— the economics must hold for every scheme")
     ap.add_argument("--out-dir", default="experiments/audit")
     args = ap.parse_args()
 
     rows, verdicts = [], {}
     for seed in args.seeds:
-        on = run_ring(seed, args.rounds, audit=True)
-        off = run_ring(seed, args.rounds, audit=False)
+        on = run_ring(seed, args.rounds, audit=True, scheme=args.scheme)
+        off = run_ring(seed, args.rounds, audit=False, scheme=args.scheme)
         honest_on = float(np.mean([on["consensus"].get(p, 0.0)
                                    for p in HONEST]))
         honest_off = float(np.mean([off["consensus"].get(p, 0.0)

@@ -38,6 +38,9 @@ def emit_root_json(path: str, doc: Dict[str, Any]) -> None:
     """Persist a schema-stable benchmark artifact (committed at the repo
     root so later PRs can regress against it): sorted keys, stable
     2-space layout, newline-terminated — diffs show value drift only."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True, default=_jsonable)
         f.write("\n")

@@ -26,7 +26,8 @@ from benchmarks import common
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config, tiny_config
 from repro.data import pipeline
-from repro.demo import compress, dct
+from repro.demo import dct
+from repro.schemes import demo as compress
 from repro.models import model as M
 
 

@@ -19,18 +19,26 @@ reports, per peer count:
 
 The result is written as a schema-stable ``BENCH_gauntlet.json`` at the
 repo root (committed, so later PRs have a perf trajectory to regress
-against) in addition to the usual CSV/JSON emit.
+against) in addition to the usual CSV/JSON emit. ``--check PATH``
+regresses the freshly measured numbers against such a committed
+trajectory and FAILS on regression: trace counts and compiled calls
+must match exactly, memory bytes must stay within ``--mem-band``, and
+steady-round latency must stay under ``--latency-band`` times the
+committed number (CI runs this against the committed repo-root file).
 
 Peers are simulated by publishing format-valid random payloads through a
 single shared jitted compressor (real PeerNodes would add one local-step
 compile per peer, which is peer-side cost, not what this bench measures).
+``--scheme`` selects the gradient scheme (repro.schemes registry).
 
 Run:  PYTHONPATH=src python benchmarks/gauntlet_bench.py [--rounds N]
-          [--peers 8 16 32 64] [--eval-chunk 8] [--out BENCH_gauntlet.json]
+          [--peers 8 16 32 64] [--eval-chunk 8] [--scheme demo]
+          [--out BENCH_gauntlet.json] [--check BENCH_gauntlet.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -47,8 +55,8 @@ from repro.configs.registry import tiny_config      # noqa: E402
 from repro.core import scores as S                  # noqa: E402
 from repro.core.gauntlet import Validator           # noqa: E402
 from repro.data import pipeline                     # noqa: E402
-from repro.demo import compress                     # noqa: E402
 from repro.models import model as M                 # noqa: E402
+from repro.schemes import make_scheme               # noqa: E402
 
 BATCH, SEQ = 2, 32
 # the five static-shape entry points whose traces must pin flat (the
@@ -57,11 +65,13 @@ PINNED = ("sync_scores", "fingerprint", "baselines", "primary",
           "aggregate")
 
 
-def build(num_peers: int, eval_chunk: int, seed: int = 0):
+def build(num_peers: int, eval_chunk: int, scheme_name: str,
+          seed: int = 0):
     cfg = tiny_config()
     hp = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=1000,
                      top_g=min(4, num_peers), eval_set_size=num_peers,
-                     demo_chunk=16, demo_topk=8, eval_chunk=eval_chunk)
+                     demo_chunk=16, demo_topk=8, eval_chunk=eval_chunk,
+                     scheme=scheme_name)
     corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=seed)
     chain = Chain(blocks_per_round=10)
     store = BucketStore(chain)
@@ -72,17 +82,16 @@ def build(num_peers: int, eval_chunk: int, seed: int = 0):
             corpus, seed, p, r, BATCH, SEQ),
     }
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
-    metas = compress.tree_meta(params, hp.demo_chunk)
+    scheme = make_scheme(hp, params)
     eval_loss = jax.jit(lambda p, b: M.loss_fn(p, b, cfg)[0])
-    validator = Validator("validator-0", params, metas, eval_loss, hp,
+    validator = Validator("validator-0", params, scheme, eval_loss, hp,
                           chain, store, data_fns,
                           rng=np.random.RandomState(seed))
     uids = [f"peer-{i:02d}" for i in range(num_peers)]
     for uid in uids:
         chain.register_peer(uid, store.create_bucket(uid))
     # one shared jitted compressor for every simulated peer
-    compress_fn = jax.jit(
-        lambda t: compress.compress_tree(t, metas, hp.demo_topk))
+    compress_fn = jax.jit(scheme.compress)
     return validator, chain, store, uids, compress_fn
 
 
@@ -99,7 +108,7 @@ def publish_round(validator, chain, store, uids, compress_fn, rnd: int):
             validator.params)
         payload = compress_fn(noise)
         store.put_gradient(uid, rnd, payload,
-                           compress.payload_bytes(payload))
+                           validator.scheme.payload_bytes(payload))
         store.buckets[uid].put(f"sync/round-{rnd:08d}", sync,
                                chain.block, 8)
 
@@ -113,9 +122,10 @@ def eval_sizes(num_peers: int, rounds: int):
                           for r in range(rounds - 1)]
 
 
-def bench(num_peers: int, rounds: int, eval_chunk: int):
+def bench(num_peers: int, rounds: int, eval_chunk: int,
+          scheme: str = "demo"):
     validator, chain, store, uids, compress_fn = build(num_peers,
-                                                       eval_chunk)
+                                                       eval_chunk, scheme)
     sizes = eval_sizes(num_peers, rounds)
     times, calls = [], []
     # the shared aggregate program's jit cache is process-wide, so count
@@ -160,6 +170,60 @@ def bench(num_peers: int, rounds: int, eval_chunk: int):
             "primary_peak_bytes_chunked": mem_chunked.get("peak_bytes")}
 
 
+def check_against(committed_path: str, result: dict, mem_band: float,
+                  latency_band: float) -> None:
+    """Tolerance-banded regression against a committed trajectory
+    (satellite: ``bench-smoke`` fails on regression instead of being
+    informational). Trace counts and compiled calls are deterministic —
+    exact match; memory is AOT buffer assignment — a tight relative
+    band; wall-clock latency is noisy on shared runners — an upper
+    bound only."""
+    with open(committed_path) as f:
+        committed = json.load(f)
+    ccfg, cfg = committed["config"], result["config"]
+    for key in ("eval_chunk", "model", "batch", "seq_len", "scheme"):
+        assert ccfg.get(key, "demo" if key == "scheme" else None) \
+            == cfg[key], (
+            f"config mismatch on {key!r}: committed {ccfg.get(key)!r} vs "
+            f"measured {cfg[key]!r} — regenerate {committed_path}")
+    by_peers = {r["peers"]: r for r in committed["series"]}
+    compared = 0
+    for row in result["series"]:
+        ref = by_peers.get(row["peers"])
+        if ref is None:
+            continue
+        compared += 1
+        p = row["peers"]
+        assert row["traces_per_entry"] == ref["traces_per_entry"], (
+            p, row["traces_per_entry"], ref["traces_per_entry"])
+        assert row["traces_after_warmup"] == ref["traces_after_warmup"], (
+            p, row["traces_after_warmup"])
+        assert (row["compiled_calls_per_round"]
+                == ref["compiled_calls_per_round"]), (
+            p, row["compiled_calls_per_round"],
+            ref["compiled_calls_per_round"])
+        for key in ("primary_temp_bytes_full_vmap",
+                    "primary_temp_bytes_chunked",
+                    "primary_peak_bytes_full_vmap",
+                    "primary_peak_bytes_chunked"):
+            got, want = row[key], ref[key]
+            if want:
+                assert got <= want * (1.0 + mem_band), (
+                    f"{key}@{p} peers regressed: {got} vs committed "
+                    f"{want} (band {mem_band:.0%})")
+        assert (row["steady_round_ms"]
+                <= ref["steady_round_ms"] * latency_band), (
+            f"steady_round_ms@{p} peers regressed: "
+            f"{row['steady_round_ms']:.1f} vs committed "
+            f"{ref['steady_round_ms']:.1f} (band {latency_band:.1f}x)")
+    assert compared, (
+        f"no comparable peer counts between the measured series and "
+        f"{committed_path} — regenerate the committed trajectory")
+    print(f"regression check vs {committed_path}: {compared} peer "
+          f"count(s) within bands (mem {mem_band:.0%}, "
+          f"latency {latency_band:.1f}x)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=4)
@@ -168,11 +232,21 @@ def main():
     ap.add_argument("--eval-chunk", type=int, default=8,
                     help="peers per fused decompress→loss block "
                          "(0 = full vmap)")
+    ap.add_argument("--scheme", default="demo",
+                    help="gradient scheme (repro.schemes registry name)")
     ap.add_argument("--out", default="BENCH_gauntlet.json",
                     help="schema-stable trajectory artifact "
                          "(committed at the repo root)")
+    ap.add_argument("--check", default=None, metavar="PATH",
+                    help="committed trajectory to regress against "
+                         "(fails on regression)")
+    ap.add_argument("--mem-band", type=float, default=0.25,
+                    help="allowed relative growth of AOT memory bytes")
+    ap.add_argument("--latency-band", type=float, default=4.0,
+                    help="allowed steady-round latency multiple")
     args = ap.parse_args()
-    rows = [bench(n, args.rounds, args.eval_chunk) for n in args.peers]
+    rows = [bench(n, args.rounds, args.eval_chunk, args.scheme)
+            for n in args.peers]
     common.emit("gauntlet_bench", rows,
                 ["peers", "compile_round_ms", "steady_round_ms",
                  "ms_per_peer", "compiled_calls_per_round",
@@ -183,13 +257,18 @@ def main():
         # bounded-memory acceptance at the largest peer count
         assert (top["primary_temp_bytes_chunked"]
                 < top["primary_temp_bytes_full_vmap"]), top
-    common.emit_root_json(args.out, {
+    result = {
         "benchmark": "gauntlet_bench",
-        "schema_version": 1,
+        "schema_version": 2,
         "config": {"rounds": args.rounds, "eval_chunk": args.eval_chunk,
-                   "model": "tiny", "batch": BATCH, "seq_len": SEQ},
+                   "model": "tiny", "batch": BATCH, "seq_len": SEQ,
+                   "scheme": args.scheme},
         "series": rows,
-    })
+    }
+    if args.check:
+        check_against(args.check, result, args.mem_band,
+                      args.latency_band)
+    common.emit_root_json(args.out, result)
     flat = {r["peers"]: r for r in rows}
     lo, hi = min(flat), max(flat)
     shrink = (flat[lo]["steady_round_ms"] / lo) / (

@@ -12,7 +12,8 @@ from repro.configs.base import TrainConfig
 from repro.configs.registry import tiny_config
 from repro.core import byzantine
 from repro.data import pipeline
-from repro.demo import compress, optimizer as demo_opt
+from repro.schemes import demo as demo_opt
+from repro.schemes import demo as compress
 from repro.models import model as M
 
 

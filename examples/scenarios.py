@@ -15,10 +15,12 @@ Run:  PYTHONPATH=src python examples/scenarios.py \
 See SCENARIOS.md (this directory) for the scenario-authoring guide.
 """
 import argparse
+import dataclasses
 import time
 
 from repro.configs.registry import tiny_config
 from repro.launch.analysis import sim_telemetry_summary
+from repro.schemes import SCHEMES as GRAD_SCHEMES
 from repro.sim import SCENARIOS, SimEngine, get_scenario
 
 
@@ -28,6 +30,10 @@ def main():
                     choices=sorted(SCENARIOS))
     ap.add_argument("--rounds", type=int, default=0,
                     help="0 = the scenario's default")
+    ap.add_argument("--scheme", default="",
+                    choices=[""] + sorted(GRAD_SCHEMES),
+                    help="gradient scheme override (default: the "
+                         "scenario's, usually 'demo')")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="",
                     help="telemetry JSON path (default "
@@ -46,12 +52,15 @@ def main():
 
     scenario = get_scenario(args.scenario, rounds=args.rounds or None,
                             seed=args.seed)
+    if args.scheme:
+        scenario = dataclasses.replace(scenario, scheme=args.scheme)
     cfg = tiny_config(num_layers=2, d_model=128, num_heads=4,
                       num_kv_heads=2, head_dim=32, d_ff=256,
                       vocab_size=2048, name="testnet-tiny")
     engine = SimEngine.from_scenario(scenario, cfg, batch=4, seq_len=48)
     print(f"scenario: {scenario.name} — {scenario.description}")
     print(f"model: {cfg.name} ({cfg.param_count() / 1e6:.2f}M params), "
+          f"scheme: {scenario.scheme}, "
           f"{scenario.rounds} rounds, {len(scenario.peers)} peer specs, "
           f"{len(scenario.validators)} validator(s), seed {scenario.seed}")
 

@@ -33,11 +33,11 @@ rating; ``benchmarks/audit_bench.py`` proves the economics (copies earn
 from repro.audit.assignment import (assigned_pages, batch_digest,
                                     chain_assigned_batch, chain_data_fns)
 from repro.audit.fingerprint import (cosine, cosine_matrix,
-                                     similarity_clusters, sketch_stacked)
+                                     similarity_clusters, sketch_pairs)
 from repro.audit.replay import ReplayAuditor
 
 __all__ = [
     "assigned_pages", "batch_digest", "chain_assigned_batch",
     "chain_data_fns", "cosine", "cosine_matrix", "similarity_clusters",
-    "sketch_stacked", "ReplayAuditor",
+    "sketch_pairs", "ReplayAuditor",
 ]

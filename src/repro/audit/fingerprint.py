@@ -1,10 +1,10 @@
 """Payload fingerprints: count-sketch projections of compressed payloads
 and pairwise-similarity policing of the eval set.
 
-A peer's payload is already a sparse object — per tensor, ``(num_chunks,
-k)`` kept DCT coefficients plus their positions — so copies can be
-detected **without ever materializing the dense params-sized deltas**: a
-count-sketch (hash each coefficient's (chunk, position) to one of ``dim``
+A peer's payload is already a sparse object — shipped values plus their
+positions, whatever the scheme's layout — so copies can be detected
+**without ever materializing the dense params-sized deltas**: a
+count-sketch (hash each shipped value's position id to one of ``dim``
 slots with a pseudo-random sign, scatter-add the values) preserves inner
 products in expectation, and cosine similarity between sketches
 approximates cosine similarity between the underlying coefficient
@@ -12,59 +12,61 @@ vectors with O(1/√dim) error. Verbatim copies sketch identically
 (cosine 1), noise-masked copies land within the noise floor of 1, and
 independent honest gradients stay far below the flag threshold.
 
+The sketch is scheme-agnostic: it consumes the (values, position-ids)
+pairs a :class:`repro.schemes.GradScheme` exposes via
+``flatten_for_sketch`` instead of assuming any payload field layout.
 Everything here is trace-friendly: the validator jits one call that
 sketches the whole stacked eval set and compares it against itself and
 against the previous round's sketches (delayed-copy detection) — O(1)
 compiled calls per round, no per-peer dispatches. The sketch hash is
-seeded per run (from the chain genesis hash), not per round, so sketches
-stay comparable across rounds.
+seeded per run from the chain hash of a block *after* registration
+closes (``AuditConfig.sketch_seed_block``) — fixed for the run so
+sketches stay comparable across rounds, but not derivable before the
+chain exists, so collisions cannot be crafted offline.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Any, List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.demo.compress import Payload
 
-
-def _is_payload(x) -> bool:
-    return isinstance(x, Payload)
-
-
-def _mix_u32(x: jnp.ndarray, salt: int) -> jnp.ndarray:
-    """Murmur3-style finalizer over uint32 — cheap, well-mixed, traceable."""
-    x = x.astype(jnp.uint32) ^ jnp.uint32(salt & 0xFFFFFFFF)
+def mix_u32(x: jnp.ndarray, salt) -> jnp.ndarray:
+    """Murmur3-style finalizer over uint32 — cheap, well-mixed,
+    traceable. ``salt`` may be a Python int (sketch-slot hashing) or a
+    traced uint32 scalar (rand-k's data-derived index seeds import this
+    same mixer, so payload layout and sketch slots share one hash
+    construction)."""
+    x = x.astype(jnp.uint32) ^ jnp.asarray(salt, dtype=jnp.uint32)
     x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
     x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
     return x ^ (x >> 16)
 
 
-def sketch_stacked(stacked, dim: int, seed: int) -> jnp.ndarray:
-    """(K, dim) count-sketch of each peer in a stacked payload tree.
+def sketch_pairs(pairs: List[Tuple[Any, Any]], dim: int,
+                 seed: int) -> jnp.ndarray:
+    """(K, dim) count-sketch of each peer in a stacked payload.
 
-    Each kept coefficient at (leaf, chunk c, position idx) contributes
-    ``±vals`` to one of ``dim`` accumulator slots; slot and sign both
-    come from one hash of (leaf, c, idx, seed). Two payloads sharing
-    their coefficients (a copy) share their sketch; independent payloads
-    decorrelate. Memory is O(K · num_chunks · k) — the payload itself.
+    ``pairs`` is the scheme's ``flatten_for_sketch`` output: per leaf, a
+    ``(values, position_ids)`` pair of equal-shape arrays whose leading
+    axis is the peer axis K. Each shipped value contributes ``±value``
+    to one of ``dim`` accumulator slots; slot and sign both come from
+    one hash of (leaf, position id, seed). Two payloads sharing their
+    values and positions (a copy) share their sketch; independent
+    payloads decorrelate. Memory is O(K · nnz) — the payload itself.
     """
-    leaves = jax.tree.leaves(stacked, is_leaf=_is_payload)
-    k_peers = leaves[0].vals.shape[0]
+    k_peers = pairs[0][0].shape[0]
     out = jnp.zeros((k_peers, dim), jnp.float32)
-    for li, p in enumerate(leaves):
-        nc = p.idx.shape[1]
-        cid = jnp.arange(nc, dtype=jnp.uint32)[None, :, None]
-        h = _mix_u32(p.idx.astype(jnp.uint32) * jnp.uint32(2654435761)
-                     + cid * jnp.uint32(40503)
-                     + jnp.uint32((li * 97 + 1) & 0xFFFFFFFF), seed)
+    for li, (vals, ids) in enumerate(pairs):
+        h = mix_u32(ids.astype(jnp.uint32)
+                    + jnp.uint32((li * 97 + 1) & 0xFFFFFFFF), seed)
         slot = (h % jnp.uint32(dim)).astype(jnp.int32)
         sign = jnp.where((h >> 16) & 1, 1.0, -1.0).astype(jnp.float32)
         rows = jnp.broadcast_to(
-            jnp.arange(k_peers, dtype=jnp.int32)[:, None, None], slot.shape)
-        out = out.at[rows, slot].add(p.vals.astype(jnp.float32) * sign)
+            jnp.arange(k_peers, dtype=jnp.int32).reshape(
+                (k_peers,) + (1,) * (slot.ndim - 1)), slot.shape)
+        out = out.at[rows, slot].add(vals.astype(jnp.float32) * sign)
     return out
 
 

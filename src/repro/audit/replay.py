@@ -37,32 +37,33 @@ from typing import Callable, List
 import jax
 import jax.numpy as jnp
 
-from repro.demo import optimizer as demo_opt
-
 
 class ReplayAuditor:
     """Recomputes local steps with the peers' own shared jitted programs.
 
     Constructed by the validator when it has the training ``grad_fn``;
     the underlying compiled programs are shared cache entries (keyed on
-    grad_fn + tree signature in ``training.peer``), so an audit adds at
-    most one extra compile to a same-shape fleet: the scalar local step
-    IS the peers' program, and the **batched** replay
+    grad_fn + scheme knobs + tree signature in ``training.peer``), so an
+    audit adds at most one extra compile to a same-shape fleet: the
+    scalar local step IS the peers' program, and the **batched** replay
     (:meth:`replay_batch`) is one vmapped variant of it that turns
     cluster arbitration + spot checks into a single dispatch instead of
     O(k) sequential local steps. The audited-peer axis is padded to a
     sticky power-of-two bucket (rows repeat batch 0; callers slice) so
-    the batched program compiles once even as cluster sizes wobble.
+    the batched program compiles once even as cluster sizes wobble —
+    and ``AuditConfig.replay_cap`` bounds how many targets a round may
+    feed it, so one giant copy cluster cannot grow the bucket either.
     """
 
-    def __init__(self, grad_fn: Callable, hp, params, metas):
+    def __init__(self, grad_fn: Callable, scheme, hp, params):
         # lazy imports: training.peer and core.gauntlet both (transitively)
         # import this module — binding at call-set-up time breaks the cycle
         from repro.core import padding
         from repro.training.peer import shared_local_step, \
             shared_replay_step
-        self._local = shared_local_step(grad_fn, hp, params, metas)
-        self._batched = shared_replay_step(grad_fn, hp, params, metas)
+        self._scheme = scheme
+        self._local = shared_local_step(scheme, grad_fn, params)
+        self._batched = shared_replay_step(scheme, grad_fn, params)
         # replay is the most expensive padded axis (a full local step
         # per row), so the floor stays at 2 — but the configured growth
         # cap applies here like everywhere else
@@ -71,7 +72,7 @@ class ReplayAuditor:
     def replay(self, params, batches: List):
         """One recomputed payload from (replica params, assigned batches);
         zero error-feedback state — the auditable part of the step."""
-        payload, _ = self._local(params, demo_opt.init_state(params),
+        payload, _ = self._local(params, self._scheme.init_state(params),
                                  batches)
         return payload
 

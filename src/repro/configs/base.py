@@ -187,8 +187,40 @@ class ModelConfig:
 
 
 @dataclass(frozen=True)
+class AuditConfig:
+    """Structured view over the proof-of-unique-work audit knobs.
+
+    Assembled by :attr:`TrainConfig.audit` from the flat ``audit_*``
+    fields and threaded through the validator's uniqueness stage, the
+    replay auditor and the sim — one object instead of eight loose
+    attributes.
+    """
+
+    enabled: bool = True
+    fingerprint_dim: int = 256
+    similarity_threshold: float = 0.9
+    replay_margin: float = 0.02
+    spot_k: int = 2
+    ban_rounds: int = 3
+    require_commit: bool = False
+    # worst-case replay cost bound: at most this many replay targets per
+    # round (0 = uncapped); oversized copy clusters are sampled instead
+    # of replayed wholesale, so one giant cluster cannot grow the sticky
+    # replay bucket (and retrace the batched replay program)
+    replay_cap: int = 16
+    # block whose chain hash seeds the per-run count-sketch; -1 resolves
+    # to the first block after genesis registration closes (one round in)
+    # so sketch collisions cannot be crafted offline before the run
+    sketch_seed_block: int = -1
+
+    def resolved_seed_block(self, blocks_per_round: int) -> int:
+        return (self.sketch_seed_block if self.sketch_seed_block >= 0
+                else blocks_per_round)
+
+
+@dataclass(frozen=True)
 class TrainConfig:
-    """Gauntlet + DeMo hyperparameters (paper §2-§3 defaults)."""
+    """Gauntlet + scheme hyperparameters (paper §2-§3 defaults)."""
 
     seed: int = 0
     learning_rate: float = 4e-4
@@ -196,10 +228,16 @@ class TrainConfig:
     total_steps: int = 20000
     weight_decay: float = 0.1
     grad_clip: float = 0.0              # DeMo path relies on sign, not clip
-    # DeMo
+    # gradient scheme (repro.schemes registry): what a payload IS, how a
+    # local step produces it, and how aggregation applies it
+    scheme: str = "demo"
+    # DeMo (scheme="demo")
     demo_beta: float = 0.999            # error-feedback decay (momentum)
     demo_chunk: int = 64                # DCT chunk side s
     demo_topk: int = 32                 # coefficients kept per chunk
+    # random-k sparsification (scheme="randk")
+    randk_beta: float = 0.9             # error-feedback decay
+    randk_frac: float = 0.02            # fraction of each tensor shipped
     # Gauntlet
     eval_beta_frac: float = 0.5         # c in beta_t = c * alpha_t  (c < 1)
     poc_gamma: float = 0.9              # EMA for mu_p (eq. 3)
@@ -235,6 +273,22 @@ class TrainConfig:
     audit_spot_k: int = 2               # random replay audits per round
     audit_ban_rounds: int = 3           # rounds a flagged peer stays zeroed
     audit_require_commit: bool = False  # flag peers with NO commitment too
+    audit_replay_cap: int = 16          # replay targets per round (0 = off)
+    audit_sketch_seed_block: int = -1   # sketch-seed block (-1 = auto)
+
+    @property
+    def audit(self) -> AuditConfig:
+        """The audit knobs as one structured object (see AuditConfig)."""
+        return AuditConfig(
+            enabled=self.audit_enabled,
+            fingerprint_dim=self.audit_fingerprint_dim,
+            similarity_threshold=self.audit_similarity_threshold,
+            replay_margin=self.audit_replay_margin,
+            spot_k=self.audit_spot_k,
+            ban_rounds=self.audit_ban_rounds,
+            require_commit=self.audit_require_commit,
+            replay_cap=self.audit_replay_cap,
+            sketch_seed_block=self.audit_sketch_seed_block)
 
 
 @dataclass(frozen=True)

@@ -1,17 +1,26 @@
 """Byzantine behaviours (paper §4) — attack payload transforms used by the
-simulation, tests and the byzantine benchmark."""
+simulation, tests and the byzantine benchmark.
+
+Scheme-generic: a payload is any pytree whose floating-point leaves carry
+the shipped update values and whose integer leaves carry positions /
+layout (DeMo's ``Payload(vals, idx)`` and rand-k's ``RandKPayload`` are
+both NamedTuple pytree nodes, so their fields surface here as ordinary
+array leaves). Attacks transform the value leaves and leave the layout
+untouched, which keeps every transformed payload format-valid for its
+scheme — exactly what a live attacker would do.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.demo.compress import Payload
-
 
 def _map_vals(payload_tree, fn):
-    return jax.tree.map(lambda p: Payload(vals=fn(p.vals), idx=p.idx),
-                        payload_tree,
-                        is_leaf=lambda x: isinstance(x, Payload))
+    """Apply ``fn`` to the floating (value) leaves, keep layout leaves."""
+    return jax.tree.map(
+        lambda x: fn(x) if jnp.issubdtype(jnp.asarray(x).dtype,
+                                          jnp.floating) else x,
+        payload_tree)
 
 
 def norm_attack(payload_tree, scale: float = 1e4):
@@ -33,9 +42,7 @@ def noise_attack(payload_tree, key, sigma: float = 1.0):
 
 def copy_payload(victim_payload_tree):
     """Peer copying (§3.1): republish another peer's payload verbatim."""
-    return jax.tree.map(lambda p: Payload(vals=p.vals, idx=p.idx),
-                        victim_payload_tree,
-                        is_leaf=lambda x: isinstance(x, Payload))
+    return jax.tree.map(lambda x: x, victim_payload_tree)
 
 
 def delayed_copy(victim_prev_payload_tree):
@@ -47,19 +54,19 @@ def delayed_copy(victim_prev_payload_tree):
 
 
 def noise_mask_copy(victim_payload_tree, key, rel_sigma: float = 0.05):
-    """Copy + small additive noise on the kept coefficients (positions
+    """Copy + small additive noise on the shipped values (layout
     unchanged): defeats verbatim-equality and digest-dedup checks while
     retaining essentially all of the victim's information — the copy
     still cosine-matches the original far above any honest cross-peer
     similarity, which is exactly what the fingerprint audit flags."""
-    leaves, treedef = jax.tree.flatten(
-        victim_payload_tree, is_leaf=lambda x: isinstance(x, Payload))
+    leaves, treedef = jax.tree.flatten(victim_payload_tree)
     out = []
-    for i, p in enumerate(leaves):
+    for i, x in enumerate(leaves):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            out.append(x)
+            continue
         k = jax.random.fold_in(key, i)
-        scale = rel_sigma * (jnp.std(p.vals.astype(jnp.float32)) + 1e-12)
-        noise = scale * jax.random.normal(k, p.vals.shape, jnp.float32)
-        out.append(Payload(vals=(p.vals.astype(jnp.float32)
-                                 + noise).astype(p.vals.dtype),
-                           idx=p.idx))
+        scale = rel_sigma * (jnp.std(x.astype(jnp.float32)) + 1e-12)
+        noise = scale * jax.random.normal(k, x.shape, jnp.float32)
+        out.append((x.astype(jnp.float32) + noise).astype(x.dtype))
     return jax.tree.unflatten(treedef, out)

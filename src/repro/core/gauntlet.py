@@ -26,7 +26,7 @@ through an explicit :class:`RoundContext` blackboard:
 ``primary-eval``
     Small set S_t: **batched** LossScore (eq. 2). The eval set's payloads
     are stacked once along a leading peer axis
-    (:func:`repro.demo.compress.stack_payloads`), the signed per-peer
+    (:meth:`repro.schemes.GradScheme.stack_payloads`), the signed per-peer
     deltas and the stepped-parameter losses are ``vmap``-ed over that axis,
     and the baseline losses L(θ, D) are computed once per *unique* batch
     (deduplicated within the assigned and within the random stack — their
@@ -45,11 +45,18 @@ through an explicit :class:`RoundContext` blackboard:
     post, and the top-G weights (eq. 6).
 
 ``aggregate``
-    Coordinated DeMo update of the global model. Contributors already
+    Coordinated scheme update of the global model. Contributors already
     present in the stacked eval-set payloads are reused by gathering their
     rows *inside* the jitted aggregator
-    (:func:`repro.demo.optimizer.aggregate_apply`) — no re-fetch and no
-    re-stack; the parameter update is fused into the same compiled call.
+    (:meth:`repro.schemes.GradScheme.aggregate_apply`) — no re-fetch and
+    no re-stack; the parameter update is fused into the same compiled call.
+
+Scheme-agnostic by construction: everything payload-shaped — the wire
+format, format validation, the dense signed delta a LossScore evaluates,
+stacking/padding, aggregation and the audit's sketch flattening — goes
+through the :class:`repro.schemes.GradScheme` object the validator is
+constructed with (``hp.scheme`` selects it); the Gauntlet itself never
+touches a payload field.
 
 :meth:`Validator.run_round` composes ``self.stages`` in order; callers may
 reorder, drop or substitute stages (benchmarks time individual stages,
@@ -103,9 +110,8 @@ from repro.comms.chain import Chain
 from repro.configs.base import TrainConfig
 from repro.core import padding, scores as S
 from repro.core.openskill import RatingBook
-from repro.demo import compress, optimizer as demo_opt
-from repro.demo.compress import Payload
 from repro.demo.schedules import warmup_cosine
+from repro.schemes import GradScheme
 
 
 # how many recent evaluated rounds of sketches the delayed-copy check
@@ -218,9 +224,9 @@ def _stack_batches(batches: List[Any]):
 
 
 def _payload_rows(stacked) -> int:
-    """Leading (peer) axis length of a stacked payload tree."""
-    return jax.tree.leaves(
-        stacked, is_leaf=lambda x: isinstance(x, Payload))[0].vals.shape[0]
+    """Leading (peer) axis length of a stacked payload tree (any scheme:
+    every array leaf of a stacked payload carries the peer axis first)."""
+    return jax.tree.leaves(stacked)[0].shape[0]
 
 
 def _unique_batches(batches: List[Any]):
@@ -303,7 +309,8 @@ class BaselineCache:
 class Validator:
     """Holds the reference model θ and runs Algorithm 1 every round."""
 
-    def __init__(self, uid: str, params, metas, eval_loss_fn: Callable,
+    def __init__(self, uid: str, params, scheme: GradScheme,
+                 eval_loss_fn: Callable,
                  hp: TrainConfig, chain: Chain, store: BucketStore,
                  data_fns: Dict[str, Callable], stake: float = 1000.0,
                  rng: Optional[np.random.RandomState] = None,
@@ -311,7 +318,7 @@ class Validator:
                  grad_fn: Optional[Callable] = None):
         self.uid = uid
         self.params = params
-        self.metas = metas
+        self.scheme = scheme
         self.eval_loss = eval_loss_fn          # (params, batch) -> scalar
         self.hp = hp
         self.chain = chain
@@ -343,18 +350,29 @@ class Validator:
         # replay audits need the training grad_fn; without it the stage
         # still runs commitment + fingerprint checks and falls back to
         # earliest-upload-wins inside similarity clusters
-        self._replayer = (ReplayAuditor(grad_fn, hp, params, metas)
+        self._replayer = (ReplayAuditor(grad_fn, scheme, hp, params)
                           if grad_fn is not None else None)
         self.audit_strikes: Dict[str, int] = {}   # uid -> rounds left zeroed
         # rolling (uids, sketches) of the last AUDIT_REF_ROUNDS evaluated
         # rounds — a window, not just round t-1, so a delayed copy still
         # matches its victim across an empty-eval round in between
         self._prev_sketches: List[tuple] = []
-        # sketch hash seeded from the chain genesis: fixed for the run so
-        # sketches stay comparable across rounds (delayed-copy detection)
-        self._sketch_seed = int.from_bytes(chain.block_hash(0)[:4], "little")
-        self._audit_rng = np.random.RandomState(
-            (hp.seed * 1_000_003 + self._sketch_seed) % (2 ** 31))
+        # sketch hash seeded from the chain hash of a block AFTER genesis
+        # registration closes (AuditConfig.sketch_seed_block), not from a
+        # static/genesis seed. Resolution is LAZY (first audit stage, by
+        # which point the block exists): on a live chain a future block's
+        # hash cannot be fetched at construction, and eager resolution
+        # would quietly reintroduce the offline-predictable seed this
+        # defends against. (This stub chain's hashes are pure functions
+        # of genesis, so the unpredictability is only as real as the
+        # chain's — the seam is what a live deployment inherits.) Fixed
+        # for the run so sketches stay comparable across rounds
+        # (delayed-copy detection), identical across validators on one
+        # chain.
+        self._sketch_seed_block = self.audit_cfg.resolved_seed_block(
+            chain.blocks_per_round)
+        self._sketch_seed_cache: Optional[int] = None
+        self._audit_rng_cache: Optional[np.random.RandomState] = None
         # the composable round pipeline — callers may substitute stages
         self.stages: List[Callable[[RoundContext], RoundContext]] = [
             self.stage_fast_filter, self.stage_uniqueness,
@@ -371,10 +389,36 @@ class Validator:
         self._sketch = jax.jit(self._traced("sketch", self._sketch_impl))
         # the SAME compiled aggregate program every peer replica uses —
         # bit-identity by construction, one compile per shape fleet-wide
-        self._agg = demo_opt.shared_aggregate_apply(params, metas,
-                                                    hp.demo_chunk)
+        self._agg = scheme.shared_aggregate_apply(params)
 
     # ------------------------------------------------------------ pieces
+    @property
+    def audit_cfg(self):
+        """The audit knobs as one structured object (AuditConfig) —
+        derived from ``self.hp`` on read, so benchmarks/tests that swap
+        ``hp`` (e.g. audit on/off comparisons) take effect immediately."""
+        return self.hp.audit
+
+    @property
+    def _sketch_seed(self) -> int:
+        """Per-run count-sketch seed, resolved lazily from the chain
+        hash of the post-registration block (see ``__init__``)."""
+        if self._sketch_seed_cache is None:
+            self._sketch_seed_cache = int.from_bytes(
+                self.chain.block_hash(self._sketch_seed_block)[:4],
+                "little")
+        return self._sketch_seed_cache
+
+    @property
+    def _audit_rng(self) -> np.random.RandomState:
+        """Spot-check / cluster-sampling RNG; folds the sketch seed in,
+        so it shares the seed's lazy post-registration resolution."""
+        if self._audit_rng_cache is None:
+            self._audit_rng_cache = np.random.RandomState(
+                (self.hp.seed * 1_000_003 + self._sketch_seed)
+                % (2 ** 31))
+        return self._audit_rng_cache
+
     def _traced(self, name: str, fn: Callable) -> Callable:
         """Wrap a jit impl so its Python body bumps ``trace_counts`` —
         the body only executes when XLA (re)traces, so the counter is
@@ -418,8 +462,7 @@ class Validator:
         O(chunk × params) instead of O(|S_t| × params)
         (:meth:`primary_memory_analysis` measures both)."""
         def block(pl, ia, ir, vm):
-            deltas = jax.vmap(
-                lambda q: demo_opt.single_peer_delta(q, self.metas))(pl)
+            deltas = jax.vmap(self.scheme.single_peer_delta)(pl)
             s_a = S.batched_loss_scores(
                 self.eval_loss, params, deltas,
                 jax.tree.map(lambda u: u[ia], uniq_a), beta,
@@ -447,16 +490,20 @@ class Validator:
         """One compiled call for the whole uniqueness fingerprint: sketch
         every eval-set payload, compare all pairs within the round AND
         against the previous round's (padded) sketches — verbatim,
-        noise-masked and delayed copies all surface as high cosines."""
-        sk = fingerprint.sketch_stacked(
-            stacked, self.hp.audit_fingerprint_dim, self._sketch_seed)
+        noise-masked and delayed copies all surface as high cosines. The
+        scheme's ``flatten_for_sketch`` supplies (values, position-ids),
+        so this entry point never assumes a payload layout."""
+        sk = fingerprint.sketch_pairs(
+            self.scheme.flatten_for_sketch(stacked),
+            self.audit_cfg.fingerprint_dim, self._sketch_seed)
         return (sk, fingerprint.cosine_matrix(sk, sk),
                 fingerprint.cosine_matrix(sk, ref))
 
     def _sketch_impl(self, stacked):
         """Sketches alone (replayed payloads get compared host-side)."""
-        return fingerprint.sketch_stacked(
-            stacked, self.hp.audit_fingerprint_dim, self._sketch_seed)
+        return fingerprint.sketch_pairs(
+            self.scheme.flatten_for_sketch(stacked),
+            self.audit_cfg.fingerprint_dim, self._sketch_seed)
 
     @staticmethod
     def _sync_scores_impl(ref, samples, alpha):
@@ -519,30 +566,9 @@ class Validator:
         return payload
 
     def _format_ok(self, payload) -> bool:
-        """§3.2 check (c): tensor structure, shapes and dtypes."""
-        try:
-            flat_p = jax.tree.leaves(
-                payload, is_leaf=lambda x: isinstance(x, Payload))
-            flat_m = jax.tree.leaves(self.metas)
-            if len(flat_p) != len(flat_m):
-                return False
-            for p, m in zip(flat_p, flat_m):
-                if not isinstance(p, Payload):
-                    return False
-                nc = m.num_chunks
-                if (p.vals.shape != (nc, self.hp.demo_topk)
-                        or p.idx.shape != (nc, self.hp.demo_topk)):
-                    return False
-                if p.idx.dtype != jnp.int32:
-                    return False
-                if not bool(jnp.isfinite(p.vals).all()):
-                    return False
-                if bool((p.idx < 0).any()) or bool(
-                        (p.idx >= m.s * m.s).any()):
-                    return False
-            return True
-        except Exception:
-            return False
+        """§3.2 check (c): structure, shapes, dtypes — the scheme owns
+        its payload layout, so it owns the check."""
+        return self.scheme.format_ok(payload)
 
     def _precheck(self, ctx: RoundContext, peer: str) -> bool:
         """§3.2 checks (a)-(c): put window, payload present, format."""
@@ -647,7 +673,7 @@ class Validator:
         """
         rk = self.chain.peers[peer].bucket_read_key
         payload, _ = self.store.get_gradient(peer, round_idx, rk)
-        delta = demo_opt.single_peer_delta(payload, self.metas)
+        delta = self.scheme.single_peer_delta(payload)
         beta = self.hp.eval_beta_frac * self.lr_at()
         d_assigned = self.data["assigned"](peer, round_idx)
         d_rand = self.data["unassigned"](peer, round_idx)
@@ -728,12 +754,14 @@ class Validator:
         against the previous round's sketches (delayed copies); (3)
         replay audits (the peers' own shared jitted local-step program)
         arbitrate clusters — the member matching its own replay is the
-        original — and spot-check ``audit_spot_k`` random peers. Flags
-        zero the round score for ``audit_ban_rounds`` rounds (scoreboard
-        stage) and demote the OpenSkill rating.
+        original — and spot-check ``spot_k`` random peers, with the
+        per-round replay-target count bounded by
+        ``AuditConfig.replay_cap``. Flags zero the round score for
+        ``ban_rounds`` rounds (scoreboard stage) and demote the OpenSkill
+        rating.
         """
-        hp = self.hp
-        if not hp.audit_enabled:
+        ac = self.audit_cfg
+        if not ac.enabled:
             return ctx
         self._select_eval_set(ctx)
         flagged: Dict[str, str] = {}
@@ -744,7 +772,7 @@ class Validator:
             for p in ctx.eval_set:
                 committed = self.chain.batch_commitment(p, ctx.round_idx)
                 if committed is None:
-                    if hp.audit_require_commit:
+                    if ac.require_commit:
                         flagged[p] = "missing_commit"
                     continue
                 expected = assignment.batch_digest(
@@ -762,14 +790,14 @@ class Validator:
             prev_uids = [u for uids, _ in self._prev_sketches for u in uids]
             ref = padding.pad_rows(
                 [row for _, arr in self._prev_sketches for row in arr],
-                hp.audit_fingerprint_dim, bucket=AUDIT_REF_ROUNDS * rows)
+                ac.fingerprint_dim, bucket=AUDIT_REF_ROUNDS * rows)
             sk, cur, prev = self._fingerprint(ctx.stacked_payloads,
                                               jnp.asarray(ref))
             self.compiled_calls += 1
             sk = np.asarray(sk)[:k]
             cur = np.asarray(cur)[:k, :k]
             prev = np.asarray(prev)[:k]
-            thr = hp.audit_similarity_threshold
+            thr = ac.similarity_threshold
             # a cross-round match makes a peer a delayed-copy SUSPECT;
             # the verdict goes through replay arbitration below (never
             # unconditional — pseudo-gradients can be temporally
@@ -788,9 +816,9 @@ class Validator:
             # (3) replay: arbitration of clusters + delayed suspects,
             # plus random spot checks
             spot: List[str] = []
-            if self._replayer is not None and hp.audit_spot_k > 0:
+            if self._replayer is not None and ac.spot_k > 0:
                 pool = [p for p in ctx.eval_set if p not in flagged]
-                take = min(hp.audit_spot_k, len(pool))
+                take = min(ac.spot_k, len(pool))
                 if take:
                     picks = self._audit_rng.choice(len(pool), size=take,
                                                    replace=False)
@@ -798,6 +826,42 @@ class Validator:
             targets = sorted({p for c in clusters for p in c
                               if p not in flagged}
                              | set(spot) | set(delayed))
+            # bound worst-case replay cost (AuditConfig.replay_cap): an
+            # unusually large copy cluster must not grow the sticky
+            # replay bucket (and retrace the batched replay program) or
+            # stall the round on O(cluster) local steps. Spot checks and
+            # delayed suspects always replay; cluster members are sampled
+            # round-robin, each cluster's earliest upload first (the
+            # strongest original-candidate heuristic) then randomly —
+            # members skipped this round are NEVER flagged (no replay
+            # evidence, and arbitration over a victim-less sample can
+            # crown a lucky copy), so capping cannot create false
+            # positives; their verdicts defer to later rounds' samples.
+            capped_out: set = set()
+            if (self._replayer is not None and ac.replay_cap > 0
+                    and len(targets) > ac.replay_cap):
+                must = [p for p in sorted(set(spot) | set(delayed))
+                        if p not in flagged][:ac.replay_cap]
+                chosen = set(must)
+                pools = []
+                for cluster in clusters:
+                    pool = [p for p in cluster
+                            if p not in flagged and p not in chosen]
+                    self._audit_rng.shuffle(pool)
+                    pool.sort(key=lambda p: self._put_block(
+                        p, ctx.round_idx))
+                    if pool:
+                        pools.append(pool)
+                while len(chosen) < ac.replay_cap and pools:
+                    for pool in list(pools):
+                        if len(chosen) >= ac.replay_cap:
+                            break
+                        chosen.add(pool.pop(0))
+                        if not pool:
+                            pools.remove(pool)
+                capped_out = set(targets) - chosen
+                audit["replay_capped"] = len(capped_out)
+                targets = sorted(chosen)
             # replay margin per target: cos(payload, replay(assigned)) −
             # cos(payload, replay(decoy)). Self-normalizing — both terms
             # decay together as error feedback accumulates, but only the
@@ -825,8 +889,13 @@ class Validator:
             for p in delayed:
                 # the suspect is a copy unless its payload matches a
                 # replay of its own assignment (the honest victim does;
-                # without a replayer the cross-round match must stand)
-                if replay_margin.get(p, -2.0) < hp.audit_replay_margin:
+                # without a replayer the cross-round match must stand).
+                # A suspect squeezed out by the replay cap has no
+                # evidence either way — deferred, like capped cluster
+                # members, never flagged on the sentinel margin
+                if p in capped_out:
+                    continue
+                if replay_margin.get(p, -2.0) < ac.replay_margin:
                     flagged[p] = "delayed_copy"
             for cluster in clusters:
                 members = [p for p in cluster if p not in flagged]
@@ -839,7 +908,7 @@ class Validator:
                     best = max(members,
                                key=lambda p: replay_margin.get(p, -2.0))
                     keep = (replay_margin.get(best, -2.0)
-                            >= hp.audit_replay_margin)
+                            >= ac.replay_margin)
                 else:
                     # no replayer: earliest upload wins the tie. This is
                     # a heuristic (a copier of a delayed payload can land
@@ -849,12 +918,18 @@ class Validator:
                         p, ctx.round_idx))
                     keep = True
                 for p in members:
-                    if p != best or not keep:
-                        flagged[p] = "copy_cluster"
+                    if p == best and keep:
+                        continue
+                    if p in capped_out:
+                        # replay-capped member: no evidence either way
+                        # this round, verdict deferred to a later
+                        # round's sample (never a blind flag)
+                        continue
+                    flagged[p] = "copy_cluster"
             for p in spot:
                 if (p not in flagged
                         and replay_margin.get(p, 1.0)
-                        < hp.audit_replay_margin):
+                        < ac.replay_margin):
                     flagged[p] = "replay_mismatch"
             audit["replay_margins"] = {
                 p: round(float(s), 6)
@@ -868,11 +943,11 @@ class Validator:
                 self._prev_sketches = (self._prev_sketches + [
                     ([ctx.eval_set[i] for i in keep_rows],
                      sk[np.asarray(keep_rows)])])[-AUDIT_REF_ROUNDS:]
-        # strikes: a fresh flag zeroes the peer for audit_ban_rounds; a
-        # clean evaluated round works one strike off
+        # strikes: a fresh flag zeroes the peer for ban_rounds; a clean
+        # evaluated round works one strike off
         for p in ctx.eval_set:
             if p in flagged:
-                self.audit_strikes[p] = hp.audit_ban_rounds
+                self.audit_strikes[p] = ac.ban_rounds
             elif self.audit_strikes.get(p, 0) > 0:
                 self.audit_strikes[p] -= 1
         ctx.audit_flagged = flagged
@@ -900,9 +975,9 @@ class Validator:
         # jitted consumer of the stack sees one pinned shape under churn
         bucket = self._pad.get("peers", len(eval_set),
                                multiple=max(hp.eval_chunk, 1))
-        ctx.stacked_payloads = compress.pad_payloads(
-            compress.stack_payloads([ctx.payloads[p] for p in eval_set]),
-            bucket)
+        ctx.stacked_payloads = self.scheme.pad_payloads(
+            self.scheme.stack_payloads(
+                [ctx.payloads[p] for p in eval_set]), bucket)
         ctx.stacked_index = {p: i for i, p in enumerate(eval_set)}
 
     def _assigned_batch(self, ctx: RoundContext, peer: str):
@@ -1074,8 +1149,8 @@ class Validator:
                         if pl is not None]
             if not payloads:
                 return ctx
-            stacked = compress.pad_payloads(
-                compress.stack_payloads(payloads),
+            stacked = self.scheme.pad_payloads(
+                self.scheme.stack_payloads(payloads),
                 self._pad.get("agg_stack", len(payloads)))
             rows = list(range(len(payloads)))
         # pad the contributor rows to the sticky bucket with zero-weight

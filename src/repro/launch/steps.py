@@ -24,10 +24,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro import sharding as sh
 from repro.configs.base import InputShape, ModelConfig, TrainConfig
-from repro.demo import adamw, compress, dct, optimizer as demo_opt
-from repro.demo.compress import Payload
+from repro.demo import adamw, dct
 from repro.demo.schedules import warmup_cosine
 from repro.models import model as M
+# the production DeMo mesh step is scheme-specific by design: it IS the
+# demo scheme's codec lowered onto the mesh (all_gather of Payload trees)
+from repro.schemes import demo as demo_opt
 
 
 # ----------------------------------------------------------------- inputs
@@ -217,7 +219,7 @@ def make_demo_train_step(cfg: ModelConfig, hp: TrainConfig, mesh,
     p_sds = stacked_param_shapes(cfg) if scan else param_shapes(cfg)
     pspec_fn = sh.stacked_param_specs if scan else sh.param_specs
     pspecs = pspec_fn(cfg, p_sds, mesh)
-    metas = compress.tree_meta(p_sds, hp.demo_chunk)
+    metas = demo_opt.tree_meta(p_sds, hp.demo_chunk)
     batch_sds = input_specs(cfg, shape)
     ng = _inner_groups(cfg, mesh)
     ef_dtype = jnp.dtype(ef_dtype or cfg.param_dtype)
@@ -232,9 +234,9 @@ def make_demo_train_step(cfg: ModelConfig, hp: TrainConfig, mesh,
             # rows (the flatten/pad reshapes otherwise make GSPMD
             # replicate the whole fp32 pipeline — §Perf pair B)
             coeffs = _hints.constrain_chunks(dct.encode(e32, m))
-            payload = compress.topk_compress(coeffs, hp.demo_topk)
+            payload = demo_opt.topk_compress(coeffs, hp.demo_topk)
             dense = _hints.constrain_chunks(
-                compress.topk_decompress(payload, m.s * m.s))
+                demo_opt.topk_decompress(payload, m.s * m.s))
             z = dct.decode(dense, m)
             return payload, (e32 - z).astype(ef_dtype)
         flat_e, tdef = jax.tree.flatten(ef)

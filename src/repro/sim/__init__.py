@@ -8,8 +8,7 @@ and multi-validator consensus — keyed to the chain's block clock.
     telemetry.to_json("telemetry.json")
 """
 from repro.sim.engine import SimEngine
-from repro.sim.network import (LinkProfile, NetworkModel, SimBucketStore,
-                               estimate_payload_bytes)
+from repro.sim.network import LinkProfile, NetworkModel, SimBucketStore
 from repro.sim.scenario import (SCENARIOS, LinkSpec, PeerSpec, Scenario,
                                 ValidatorSpec, get_scenario,
                                 register_scenario)
@@ -17,7 +16,7 @@ from repro.sim.telemetry import HONEST_BEHAVIORS, Telemetry
 
 __all__ = [
     "SimEngine", "LinkProfile", "NetworkModel", "SimBucketStore",
-    "estimate_payload_bytes", "SCENARIOS", "LinkSpec", "PeerSpec",
+    "SCENARIOS", "LinkSpec", "PeerSpec",
     "Scenario", "ValidatorSpec", "get_scenario", "register_scenario",
     "HONEST_BEHAVIORS", "Telemetry",
 ]

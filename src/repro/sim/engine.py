@@ -40,8 +40,7 @@ from repro.audit import assignment as audit_assignment
 from repro.comms.chain import Chain
 from repro.core import scores as S
 from repro.core.gauntlet import BaselineCache, RoundReport, Validator
-from repro.sim.network import (NetworkModel, SimBucketStore,
-                               estimate_payload_bytes)
+from repro.sim.network import NetworkModel, SimBucketStore
 from repro.sim.scenario import PeerSpec, Scenario
 from repro.sim.telemetry import HONEST_BEHAVIORS, Telemetry
 from repro.training.peer import PeerConfig, PeerNode
@@ -130,7 +129,7 @@ class SimEngine:
                         desync_start=spec.desync_start,
                         copy_victim=spec.copy_victim)
         # a joiner bootstraps its replica from the canonical checkpoint
-        self.peers[spec.uid] = PeerNode(pc, cp.params, cp.metas,
+        self.peers[spec.uid] = PeerNode(pc, cp.params, cp.scheme,
                                         self.grad_fn, self.hp, self.chain,
                                         self.store, cp.data)
         self.telemetry.log_event(self.chain.block, "join", spec.uid)
@@ -340,12 +339,14 @@ class SimEngine:
         ``eval_chunk`` (ignored when ``hp`` is supplied) bounds each
         validator's primary-eval memory to that many dense deltas at a
         time — the knob for running wide eval sets on small validator
-        hardware (see ``hp.eval_chunk``)."""
+        hardware (see ``hp.eval_chunk``). ``scenario.scheme`` selects the
+        gradient scheme (repro.schemes registry) when ``hp`` is not
+        supplied; with an explicit ``hp``, ``hp.scheme`` wins."""
         from repro.configs.base import TrainConfig
         from repro.configs.registry import tiny_config
         from repro.data import pipeline
-        from repro.demo import compress
         from repro.models import model as M
+        from repro.schemes import make_scheme
 
         cfg = cfg or tiny_config()
         n_specs = len(scenario.peers)
@@ -355,7 +356,7 @@ class SimEngine:
             top_g=scenario.top_g or max(3, n_specs // 2),
             eval_set_size=scenario.eval_set_size or n_specs,
             demo_chunk=16, demo_topk=8, poc_gamma=0.6,
-            eval_chunk=eval_chunk)
+            eval_chunk=eval_chunk, scheme=scenario.scheme)
         corpus = pipeline.MarkovCorpus(cfg.vocab_size, seed=scenario.seed)
         chain = Chain(blocks_per_round=blocks_per_round,
                       genesis_seed=scenario.seed)
@@ -366,7 +367,7 @@ class SimEngine:
         data_fns = audit_assignment.chain_data_fns(corpus, chain, hp.seed,
                                                    batch, seq_len)
         params = M.init_params(cfg, jax.random.PRNGKey(hp.seed))
-        metas = compress.tree_meta(params, hp.demo_chunk)
+        scheme = make_scheme(hp, params)
         eval_loss = jax.jit(lambda p, b: M.loss_fn(p, b, cfg)[0])
 
         def grad_fn(p, b):
@@ -374,7 +375,7 @@ class SimEngine:
 
         cache = BaselineCache() if len(scenario.validators) > 1 else None
         validators = [
-            Validator(vs.uid, params, metas, eval_loss, hp, chain, store,
+            Validator(vs.uid, params, scheme, eval_loss, hp, chain, store,
                       data_fns, stake=vs.stake,
                       rng=np.random.RandomState(
                           (scenario.seed * 7919
@@ -384,7 +385,7 @@ class SimEngine:
         telemetry = Telemetry(scenario.name, scenario.seed, meta={
             "model": cfg.name, "params": cfg.param_count(),
             "peers": n_specs, "validators": len(scenario.validators),
-            "blocks_per_round": blocks_per_round,
+            "blocks_per_round": blocks_per_round, "scheme": scheme.name,
             "description": scenario.description})
         engine = cls(chain, store, validators, {}, telemetry=telemetry,
                      grad_fn=grad_fn,
@@ -394,7 +395,7 @@ class SimEngine:
                          corpus, 99, "eval", rnd, eval_batch, seq_len))
         engine._rounds = scenario.rounds
         # resolve round-relative link specs against the real payload size
-        payload_bytes = estimate_payload_bytes(metas, hp.demo_topk)
+        payload_bytes = scheme.estimate_payload_bytes()
         network.default = scenario.default_link.resolve(payload_bytes,
                                                         blocks_per_round)
         for spec in scenario.peers:

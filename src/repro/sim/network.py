@@ -9,9 +9,10 @@ of link quality vs. the put window: a slow or lossy link misses the
 window exactly the way a real over-the-internet peer does.
 
 The delay is bandwidth-proportional in the *submitted* ``size_bytes``
-(``repro.demo.compress.payload_bytes``), so bigger payloads genuinely
-take longer to arrive. Links are per-peer and independent — shared-
-capacity contention is a stated ROADMAP follow-up.
+(``GradScheme.payload_bytes`` — whatever the scheme's wire format is),
+so bigger payloads genuinely take longer to arrive. Links are per-peer
+and independent — shared-capacity contention is a stated ROADMAP
+follow-up.
 """
 from __future__ import annotations
 
@@ -95,16 +96,6 @@ class NetworkModel:
         if p.jitter_blocks > 0:
             delay += self.rng.rand() * p.jitter_blocks
         return int(math.ceil(delay))
-
-
-def estimate_payload_bytes(metas, topk: int) -> int:
-    """Wire size of one compressed pseudo-gradient, from the chunk layout
-    alone (mirrors ``compress.payload_bytes``: fp32 vals + int16 idx)."""
-    import jax
-    total = 0
-    for m in jax.tree.leaves(metas):
-        total += m.num_chunks * topk * (4 + 2)
-    return total
 
 
 class SimBucketStore(BucketStore):

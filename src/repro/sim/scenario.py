@@ -103,6 +103,9 @@ class Scenario:
     # incentive sizing overrides; None = engine heuristics
     top_g: Optional[int] = None
     eval_set_size: Optional[int] = None
+    # gradient scheme (repro.schemes registry name) the testnet trains
+    # with; ignored when the engine is handed an explicit TrainConfig
+    scheme: str = "demo"
 
 
 # ------------------------------------------------------------- registry

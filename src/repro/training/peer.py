@@ -40,10 +40,9 @@ import numpy as np
 from repro.audit import assignment
 from repro.comms.bucket import BucketStore
 from repro.comms.chain import Chain
-from repro.configs.base import TrainConfig
 from repro.core import byzantine, padding, scores as S
 from repro.core.gauntlet import eligible_contributors
-from repro.demo import compress, optimizer as demo_opt
+from repro.schemes import GradScheme, tree_signature
 
 COPYCAT_BEHAVIORS = ("copycat", "copycat_delayed", "copycat_noise")
 
@@ -63,29 +62,29 @@ class PeerConfig:
 # previously compiled N identical local-step and aggregate programs —
 # one compile per PeerNode construction, which dominates wall time in
 # 50+ peer simulations and again on every churn join. Both hot entry
-# points are now cached per (tree structure, leaf shapes/dtypes, DeMo
-# chunk/k) so every same-shape peer shares one compiled program.
+# points are now cached per (tree structure, leaf shapes/dtypes, scheme
+# knobs) so every same-shape peer shares one compiled program.
 #
 # The local-step cache is weak-keyed on grad_fn (shapes alone cannot
 # distinguish two models whose loss differs but whose param trees match),
 # so a sim's programs are reclaimed with its grad_fn instead of leaking
 # one compile per engine built in the process. The aggregate program is
-# shared fleet-wide via ``demo_opt.shared_aggregate_apply`` — validator
+# shared fleet-wide via ``GradScheme.shared_aggregate_apply`` — validator
 # included, so every replica literally runs the same compiled callable.
 
 _LOCAL_JIT_CACHE: "weakref.WeakKeyDictionary[Callable, Dict[tuple, Callable]]" \
     = weakref.WeakKeyDictionary()
 
 
-def shared_local_step(grad_fn: Callable, hp: TrainConfig, params,
-                      metas) -> Callable:
-    """One jitted DeMo local step per (grad_fn, tree structure, chunk, k).
+def shared_local_step(scheme: GradScheme, grad_fn: Callable,
+                      params) -> Callable:
+    """One jitted local step per (grad_fn, scheme knobs, tree structure).
 
-    ``metas`` is fully determined by the leaf shapes and ``hp.demo_chunk``,
-    so it rides along in the closure rather than the key.
+    The scheme's shape metadata is fully determined by the leaf shapes
+    and its knobs, so the scheme object rides along in the closure while
+    ``scheme.cache_key()`` stands in for it in the cache key.
     """
-    key = (hp.demo_beta, hp.demo_chunk, hp.demo_topk,
-           *demo_opt.tree_signature(params))
+    key = (scheme.cache_key(), *tree_signature(params))
     per_grad = _LOCAL_JIT_CACHE.setdefault(grad_fn, {})
     fn = per_grad.get(key)
     if fn is None:
@@ -97,7 +96,9 @@ def shared_local_step(grad_fn: Callable, hp: TrainConfig, params,
         def impl(params, state, batches):
             """Accumulate grads over the round's micro-batches (more data
             => more batches, like the live run's per-round token budget),
-            then one DeMo compress step."""
+            then one fused scheme compress step. ``batches[0]`` is the
+            peer's primary (assigned, chain-committed) batch — schemes
+            with data-derived payload layouts seed from it."""
             gf = grad_ref()
             assert gf is not None, "grad_fn was garbage-collected"
             grads = gf(params, batches[0])
@@ -106,18 +107,16 @@ def shared_local_step(grad_fn: Callable, hp: TrainConfig, params,
                 grads = jax.tree.map(lambda a, c: a + c, grads, g2)
             n = float(len(batches))
             grads = jax.tree.map(lambda g: g / n, grads)
-            return demo_opt.local_step(grads, state, beta=hp.demo_beta,
-                                       chunk=hp.demo_chunk,
-                                       k=hp.demo_topk, metas=metas)
+            return scheme.local_step(grads, state, batch=batches[0])
         fn = per_grad[key] = jax.jit(impl)
     return fn
 
 
-def shared_replay_step(grad_fn: Callable, hp: TrainConfig, params,
-                       metas) -> Callable:
-    """One jitted **vmapped** replay program per (grad_fn, tree
-    structure, chunk, k): ``(params, batches_with_leading_K)`` — one
-    gradient + DeMo compression per row, zero error-feedback state.
+def shared_replay_step(scheme: GradScheme, grad_fn: Callable,
+                       params) -> Callable:
+    """One jitted **vmapped** replay program per (grad_fn, scheme knobs,
+    tree structure): ``(params, batches_with_leading_K)`` — one gradient
+    + scheme compression per row, zero error-feedback state.
 
     This is the batched form of the replay audit's local step
     (``repro.audit.replay.ReplayAuditor``): cluster arbitration + spot
@@ -125,8 +124,7 @@ def shared_replay_step(grad_fn: Callable, hp: TrainConfig, params,
     sequential local-step calls. Cached alongside the scalar program so
     a fleet of same-shape validators compiles it once.
     """
-    key = ("replay", hp.demo_beta, hp.demo_chunk, hp.demo_topk,
-           *demo_opt.tree_signature(params))
+    key = ("replay", scheme.cache_key(), *tree_signature(params))
     per_grad = _LOCAL_JIT_CACHE.setdefault(grad_fn, {})
     fn = per_grad.get(key)
     if fn is None:
@@ -135,12 +133,11 @@ def shared_replay_step(grad_fn: Callable, hp: TrainConfig, params,
         def impl(params, batches):
             gf = grad_ref()
             assert gf is not None, "grad_fn was garbage-collected"
-            state = demo_opt.init_state(params)
+            state = scheme.init_state(params)
 
             def one(b):
-                payload, _ = demo_opt.local_step(
-                    gf(params, b), state, beta=hp.demo_beta,
-                    chunk=hp.demo_chunk, k=hp.demo_topk, metas=metas)
+                payload, _ = scheme.local_step(gf(params, b), state,
+                                               batch=b)
                 return payload
             return jax.vmap(one)(batches)
         fn = per_grad[key] = jax.jit(impl)
@@ -148,27 +145,26 @@ def shared_replay_step(grad_fn: Callable, hp: TrainConfig, params,
 
 
 class PeerNode:
-    def __init__(self, pc: PeerConfig, params, metas, grad_fn: Callable,
-                 hp: TrainConfig, chain: Chain, store: BucketStore,
+    def __init__(self, pc: PeerConfig, params, scheme: GradScheme,
+                 grad_fn: Callable, hp, chain: Chain, store: BucketStore,
                  data_fns: Dict[str, Callable]):
         self.pc = pc
         self.uid = pc.uid
         self.params = params                       # local replica
-        self.metas = metas
+        self.scheme = scheme
         self.grad_fn = grad_fn                     # (params, batch) -> grads
         self.hp = hp
         self.chain = chain
         self.store = store
         self.data = data_fns
-        self.state = demo_opt.init_state(params)
+        self.state = scheme.init_state(params)
         self._paused_until = (pc.desync_start + pc.desync_rounds
                               if pc.behavior == "desync" else -1)
         read_key = store.create_bucket(pc.uid)
         chain.register_peer(pc.uid, read_key)
         # shared across every same-shape peer (one compile, not one per node)
-        self._local = shared_local_step(grad_fn, hp, params, metas)
-        self._agg = demo_opt.shared_aggregate_apply(params, metas,
-                                                    hp.demo_chunk)
+        self._local = shared_local_step(scheme, grad_fn, params)
+        self._agg = scheme.shared_aggregate_apply(params)
         # sticky contributor-axis bucket, like the validator's: the
         # shared aggregate program holds one shape as top-G wobbles
         self._agg_pad = padding.BucketTracker(minimum=hp.eval_pad_min,
@@ -263,7 +259,7 @@ class PeerNode:
                     payload, jax.random.PRNGKey(round_idx))
         self.chain.commit_batch(self.uid, round_idx,
                                 assignment.batch_digest(claim))
-        size = compress.payload_bytes(payload)
+        size = self.scheme.payload_bytes(payload)
         if b == "late":
             # simulate missing the window: stamp after window close
             late_block = (round_idx + 1) * self.chain.blocks_per_round + 1
@@ -305,8 +301,8 @@ class PeerNode:
         # fleet-shared compiled program pins to one shape under churn
         n = len(payloads)
         bucket = self._agg_pad.get("agg", n)
-        stacked = compress.pad_payloads(
-            compress.stack_payloads(payloads), bucket)
+        stacked = self.scheme.pad_payloads(
+            self.scheme.stack_payloads(payloads), bucket)
         rows = jnp.arange(bucket, dtype=jnp.int32)
         weights = jnp.asarray(
             np.r_[np.full(n, 1.0 / n), np.zeros(bucket - n)], jnp.float32)

@@ -22,8 +22,8 @@ from repro.comms.chain import Chain
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.gauntlet import RoundReport, Validator
 from repro.data import pipeline
-from repro.demo import compress
 from repro.models import model as M
+from repro.schemes import make_scheme
 from repro.training.peer import PeerConfig, PeerNode
 
 
@@ -51,7 +51,7 @@ def build_sim(cfg: ModelConfig, hp: TrainConfig,
 
     key = jax.random.PRNGKey(hp.seed)
     params = M.init_params(cfg, key)
-    metas = compress.tree_meta(params, hp.demo_chunk)
+    scheme = make_scheme(hp, params)      # hp.scheme selects the codec
 
     def eval_loss(p, b):
         return M.loss_fn(p, b, cfg)[0]
@@ -61,13 +61,13 @@ def build_sim(cfg: ModelConfig, hp: TrainConfig,
     def grad_fn(p, b):
         return jax.grad(lambda pp: M.loss_fn(pp, b, cfg)[0])(p)
 
-    validator = Validator("validator-0", params, metas, eval_loss_j, hp,
+    validator = Validator("validator-0", params, scheme, eval_loss_j, hp,
                           chain, store, data_fns,
                           rng=np.random.RandomState(hp.seed),
                           grad_fn=grad_fn)
     peers = {}
     for pc in peer_configs:
-        peers[pc.uid] = PeerNode(pc, params, metas, grad_fn, hp, chain,
+        peers[pc.uid] = PeerNode(pc, params, scheme, grad_fn, hp, chain,
                                  store, data_fns)
     return validator, peers, chain, store, corpus
 

@@ -11,7 +11,7 @@ from repro.audit import assignment, fingerprint
 from repro.comms.chain import Chain
 from repro.configs.registry import tiny_config
 from repro.core import byzantine
-from repro.demo.compress import Payload
+from repro.schemes.demo import Payload
 from repro.sim import SimEngine, get_scenario
 
 CFG = tiny_config()
@@ -85,9 +85,10 @@ def test_sketch_separates_copies_from_independent_payloads():
     b = _rand_payload(jax.random.fold_in(key, 2))
     verbatim = byzantine.copy_payload(a)
     masked = byzantine.noise_mask_copy(a, jax.random.fold_in(key, 3))
-    from repro.demo import compress
-    stacked = compress.stack_payloads([a, b, verbatim, masked])
-    sk = sketch = np.asarray(fingerprint.sketch_stacked(stacked, 256, 42))
+    from repro.schemes import demo
+    stacked = demo.stack_payloads([a, b, verbatim, masked])
+    sk = sketch = np.asarray(fingerprint.sketch_pairs(
+        demo.flatten_payloads_for_sketch(stacked), 256, 42))
     sim = np.asarray(fingerprint.cosine_matrix(
         jnp.asarray(sk), jnp.asarray(sketch)))
     assert sim[0, 2] > 0.999                        # verbatim copy
@@ -101,11 +102,12 @@ def test_sketch_separates_copies_from_independent_payloads():
 def test_sketch_is_seed_sensitive_but_round_stable():
     key = jax.random.PRNGKey(1)
     a = _rand_payload(key)
-    from repro.demo import compress
-    stacked = compress.stack_payloads([a])
-    s1 = np.asarray(fingerprint.sketch_stacked(stacked, 128, 7))
-    s2 = np.asarray(fingerprint.sketch_stacked(stacked, 128, 7))
-    s3 = np.asarray(fingerprint.sketch_stacked(stacked, 128, 8))
+    from repro.schemes import demo
+    stacked = demo.stack_payloads([a])
+    pairs = demo.flatten_payloads_for_sketch(stacked)
+    s1 = np.asarray(fingerprint.sketch_pairs(pairs, 128, 7))
+    s2 = np.asarray(fingerprint.sketch_pairs(pairs, 128, 7))
+    s3 = np.asarray(fingerprint.sketch_pairs(pairs, 128, 8))
     np.testing.assert_array_equal(s1, s2)
     assert not np.array_equal(s1, s3)
 

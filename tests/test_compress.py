@@ -7,8 +7,9 @@ try:
 except ImportError:
     from _hypothesis_compat import given, settings, st
 
-from repro.demo import compress, dct
-from repro.demo.compress import Payload
+from repro.demo import dct
+from repro.schemes import demo as compress
+from repro.schemes.demo import Payload
 
 
 def test_topk_selects_largest_magnitudes():

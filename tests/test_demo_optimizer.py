@@ -7,8 +7,10 @@ try:
 except ImportError:
     from _hypothesis_compat import given, settings, st
 
-from repro.demo import compress, dct, optimizer
-from repro.demo.compress import Payload
+from repro.demo import dct
+from repro.schemes import demo as compress
+from repro.schemes import demo as optimizer
+from repro.schemes.demo import Payload
 
 
 def _setup(key=0, shape=(64, 48), chunk=16):

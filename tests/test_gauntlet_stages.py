@@ -229,9 +229,9 @@ def test_partial_baseline_reuse_computes_only_missing_rows():
     cache = BaselineCache()
     validator.baseline_cache = cache
     replica = Validator("validator-replica", validator.params,
-                        validator.metas, validator.eval_loss, validator.hp,
-                        chain, store, validator.data, stake=10.0,
-                        rng=np.random.RandomState(123),
+                        validator.scheme, validator.eval_loss,
+                        validator.hp, chain, store, validator.data,
+                        stake=10.0, rng=np.random.RandomState(123),
                         baseline_cache=cache)
     assert chain.checkpoint_pointer == validator.uid   # highest stake
     _publish(validator, peers, chain, 0)

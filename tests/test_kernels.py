@@ -71,7 +71,8 @@ def test_demo_encode_decode_match_reference_pipeline():
 
 def test_kernel_backed_local_step_equals_ref():
     """Swapping encode_fn to the Pallas pipeline changes nothing."""
-    from repro.demo import compress, optimizer
+    from repro.schemes import demo as compress
+    from repro.schemes import demo as optimizer
     params = {"w": jax.random.normal(jax.random.PRNGKey(3), (64, 48))}
     grads = {"w": jax.random.normal(jax.random.PRNGKey(4), (64, 48))}
     metas = compress.tree_meta(params, 16)

@@ -100,9 +100,8 @@ def test_joiner_checkpoint_download_costs_bandwidth_time():
     delay = join[0]["block"] - boot[0]["block"]
     ckpt = sum(int(np.asarray(leaf).nbytes) for leaf in jax.tree.leaves(
         list(eng.validators.values())[0].params))
-    from repro.sim import estimate_payload_bytes
     v = list(eng.validators.values())[0]
-    payload = estimate_payload_bytes(v.metas, v.hp.demo_topk)
+    payload = v.scheme.estimate_payload_bytes()
     assert delay >= int(0.02 * 10 * ckpt / payload)   # ∝ checkpoint bytes
     assert "newcomer" in eng.peers                    # ...but it DID join
     # it could not have published round 1 (no replica during the window)
@@ -153,11 +152,16 @@ FUZZ_ADVERSARIES = ("lazy", "byz_noise", "byz_norm", "copycat",
 def test_fuzzed_scenarios_keep_honest_majority():
     """Sample random Scenario specs and assert the paper's survival
     invariant — honest peers hold a majority of consensus incentive in
-    every round — for every sampled run."""
+    every round — for every sampled run.
+
+    The sampled space covers the ROADMAP follow-ups: multi-validator
+    runs (consensus + baseline-cache paths under fuzz), link-quality
+    extremes (an honest peer behind a window-missing uplink / a lossy
+    drop-half link), and larger populations (up to 8 honest peers)."""
     from repro.launch.analysis import sim_telemetry_summary
-    for seed in range(3):
+    for seed in range(4):
         rng = np.random.RandomState(4242 + seed)
-        n_honest = 4 + int(rng.randint(2))
+        n_honest = 4 + int(rng.randint(5))            # 4..8 honest
         n_adv = 1 + int(rng.randint(2))               # strictly a minority
         peers = [PeerSpec(uid=f"h{i}",
                           data_multiplier=1 + int(rng.rand() < 0.25))
@@ -170,16 +174,40 @@ def test_fuzzed_scenarios_keep_honest_majority():
         if rng.rand() < 0.5:                          # some churn
             peers.append(PeerSpec(uid="drifter", join_round=1,
                                   leave_round=3))
+        if rng.rand() < 0.5:
+            # link-quality extremes: honest intent, terrible
+            # infrastructure — may never land a payload, must neither
+            # crash a round nor draw an audit flag
+            extreme = (LinkSpec(upload_rounds=1.5)     # misses window
+                       if rng.rand() < 0.5 else
+                       LinkSpec(drop_prob=0.5, upload_rounds=0.3,
+                                jitter_rounds=0.5))    # lossy + jittery
+            peers.append(PeerSpec(uid="h-backwater", link=extreme))
         link = LinkSpec(latency_rounds=float(0.1 * rng.rand()),
                         jitter_rounds=float(0.1 * rng.rand()))
+        validators = (ValidatorSpec(uid="v0", stake=1000.0),)
+        if seed % 2:
+            # ≥2 validators: consensus median + baseline dedup under fuzz
+            validators += (ValidatorSpec(
+                uid="v1", stake=float(200 + 500 * rng.rand())),)
         sc = Scenario(name=f"fuzz-{seed}", rounds=4, seed=seed,
-                      peers=tuple(peers), default_link=link)
-        tel = _engine(sc).run()
+                      peers=tuple(peers), default_link=link,
+                      validators=validators)
+        eng = _engine(sc)
+        tel = eng.run()
         summ = sim_telemetry_summary(tel.to_dict())
         assert summ["honest_majority_all_rounds"], (seed, summ)
-        # and the audit never flagged an honest worker
+        # and the audit never flagged an honest worker — any validator
         assert not any(uid.startswith("h") or uid == "drifter"
                        for uid in summ["audit_flagged_peers"]), (seed, summ)
+        if len(validators) > 1:
+            # every validator posted and replicas stayed bit-identical
+            assert set(eng.chain._weights) == {"v0", "v1"}
+            ref = jax.tree.leaves(eng.validators["v0"].params)
+            for x, y in zip(ref,
+                            jax.tree.leaves(eng.validators["v1"].params)):
+                np.testing.assert_array_equal(np.asarray(x),
+                                              np.asarray(y))
 
 
 def test_telemetry_is_deterministic_across_runs():

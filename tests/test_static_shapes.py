@@ -12,8 +12,9 @@ from repro.configs.base import TrainConfig
 from repro.configs.registry import tiny_config
 from repro.core import padding
 from repro.core.gauntlet import Validator
-from repro.demo import compress, optimizer as demo_opt
-from repro.demo.compress import Payload
+from repro.schemes import demo as compress
+from repro.schemes import demo as demo_opt
+from repro.schemes.demo import Payload
 from repro.training.peer import PeerConfig
 from repro.training.round_loop import build_sim
 
@@ -118,10 +119,10 @@ def test_one_trace_per_entry_point_across_churn():
 # ------------------------------------------------------------- parity
 
 def _twin_validators(validator, chain, store, hp_a, hp_b):
-    va = Validator("validator-a", validator.params, validator.metas,
+    va = Validator("validator-a", validator.params, validator.scheme,
                    validator.eval_loss, hp_a, chain, store,
                    validator.data, rng=np.random.RandomState(hp_a.seed))
-    vb = Validator("validator-b", validator.params, validator.metas,
+    vb = Validator("validator-b", validator.params, validator.scheme,
                    validator.eval_loss, hp_b, chain, store,
                    validator.data, rng=np.random.RandomState(hp_b.seed))
     return va, vb
@@ -191,11 +192,11 @@ def test_replay_batch_matches_scalar_replay():
     batched = rp.replay_batch(validator.params, batches)
     assert _leaves(batched)[0].vals.shape[0] >= 2   # padded bucket
     for i, single in enumerate(singles):
-        dense_s = compress.decompress_tree(single, validator.metas)
+        dense_s = compress.decompress_tree(single, validator.scheme.metas)
         dense_b = compress.decompress_tree(
             jax.tree.map(lambda p: Payload(p.vals[i], p.idx[i]), batched,
                          is_leaf=lambda x: isinstance(x, Payload)),
-            validator.metas)
+            validator.scheme.metas)
         for ls, lb in zip(jax.tree.leaves(dense_s),
                           jax.tree.leaves(dense_b)):
             np.testing.assert_allclose(np.asarray(lb), np.asarray(ls),
@@ -243,3 +244,32 @@ def test_padded_aggregate_rows_are_exact_noops():
                                    metas=metas)
     for lb, lo in zip(jax.tree.leaves(base), jax.tree.leaves(out)):
         np.testing.assert_array_equal(np.asarray(lb), np.asarray(lo))
+
+
+def test_replay_cap_bounds_bucket_on_giant_cluster():
+    """Satellite (ROADMAP PR-4 follow-up): an unusually large copy
+    cluster must not grow the sticky replay bucket past the configured
+    cap — worst-case replay cost is bounded, with no churn retrace —
+    and capping must never flag an honest peer on missing evidence."""
+    cap = 4
+    hp = dataclasses.replace(HP, eval_set_size=12, audit_replay_cap=cap)
+    ring = [PeerConfig(uid=f"copy-{i}", behavior="copycat_noise",
+                       copy_victim="h0") for i in range(8)]
+    validator, peers, chain, store, corpus = _sim(4, hp, extra=ring)
+    uids = list(peers)
+    for rnd in range(2):
+        _publish(peers, chain, rnd)
+        ctx = validator.run_stages(validator.build_context(rnd, uids))
+        # zero false positives even though most of the cluster was
+        # sampled away from replay this round
+        assert not any(p.startswith("h") for p in ctx.audit_flagged), (
+            rnd, ctx.audit_flagged)
+        # the skipped targets are surfaced in the audit diagnostics
+        if len(ctx.audit.get("clusters", [[]])[0]) > cap:
+            assert ctx.audit.get("replay_capped", 0) > 0
+    rp = validator._replayer
+    assert rp is not None
+    # the sticky replay bucket is pinned by the cap, not the cluster:
+    # spot checks and delayed suspects never exceed cap by construction
+    assert rp._pad.peek("replay") <= padding.pow2_bucket(cap, minimum=2), \
+        rp._pad.peek("replay")
