@@ -55,19 +55,26 @@ class ReplayAuditor:
     feed it, so one giant copy cluster cannot grow the bucket either.
     """
 
-    def __init__(self, grad_fn: Callable, scheme, hp, params):
+    def __init__(self, grad_fn: Callable, scheme, hp, params, mesh=None):
         # lazy imports: training.peer and core.gauntlet both (transitively)
         # import this module — binding at call-set-up time breaks the cycle
         from repro.core import padding
+        from repro.sharding import peer_mesh_size
         from repro.training.peer import shared_local_step, \
             shared_replay_step
         self._scheme = scheme
         self._local = shared_local_step(scheme, grad_fn, params)
-        self._batched = shared_replay_step(scheme, grad_fn, params)
+        # a mesh validator replays its audit targets row-parallel too:
+        # the batched program shards the audited-peer axis (one local
+        # step per row is collective-free), so the bucket folds the
+        # device count in alongside the floor
+        self._batched = shared_replay_step(scheme, grad_fn, params,
+                                           mesh=mesh)
         # replay is the most expensive padded axis (a full local step
         # per row), so the floor stays at 2 — but the configured growth
         # cap applies here like everywhere else
-        self._pad = padding.BucketTracker(minimum=2, cap=hp.eval_pad_cap)
+        self._pad = padding.BucketTracker(minimum=2, cap=hp.eval_pad_cap,
+                                          multiple=peer_mesh_size(mesh))
 
     def replay(self, params, batches: List):
         """One recomputed payload from (replica params, assigned batches);

@@ -89,19 +89,40 @@ runs ``lax.map`` over vmap blocks of that many peers with
 decompress→sign→step→loss fused inside each block, bounding peak live
 memory at O(eval_chunk × params) instead of materializing all |S_t|
 dense deltas at once (:meth:`Validator.primary_memory_analysis`
-measures the difference without executing).
+measures the difference without executing). The unique-batch baseline
+stacks stream through the same ``lax.map`` chunking.
+
+Multi-device rounds
+-------------------
+Constructed with ``mesh=`` (a 1-axis peer mesh from
+:func:`repro.launch.mesh.make_peer_mesh`), the validator shard_maps its
+row-parallel entry points — primary eval, baselines, sync scores,
+fingerprint sketches and the batched replay audit — over
+``sharding.PEER_AXIS``: each device scores its slice of the padded peer
+bucket, so an N-device validator covers ~N× the peers per wall-clock
+round. Every sticky bucket is additionally padded to a multiple of the
+mesh size (times any chunk multiple — see
+:class:`repro.core.padding.BucketTracker`), so shards divide evenly and
+the masked rows stay exact no-ops. Only the fingerprint stage needs a
+collective (one tiled ``all_gather`` of the K×fingerprint_dim sketch
+rows before the pairwise cosine); aggregation stays unsharded — it is
+the fleet-shared program peer replicas run bit-identically. A 1-device
+mesh lowers the exact same math and reproduces the no-mesh path
+bit-for-bit (tests/test_gauntlet_mesh.py pins this).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.audit import assignment, fingerprint
 from repro.audit.replay import ReplayAuditor
@@ -315,7 +336,9 @@ class Validator:
                  data_fns: Dict[str, Callable], stake: float = 1000.0,
                  rng: Optional[np.random.RandomState] = None,
                  baseline_cache: Optional[BaselineCache] = None,
-                 grad_fn: Optional[Callable] = None):
+                 grad_fn: Optional[Callable] = None,
+                 mesh=None):
+        from repro import sharding as shd   # pulls in model modules
         self.uid = uid
         self.params = params
         self.scheme = scheme
@@ -332,25 +355,43 @@ class Validator:
         self.step = 0
         self.current_top_g: List[str] = []
         self.compiled_calls = 0        # batched jit-entry invocations
+        self.last_stage_ms: Dict[str, float] = {}  # per-stage wall ms of
+                                       # the most recent run_stages call
         self.baseline_calls = 0        # baseline-loss invocations (cacheable)
         self.baseline_rows = 0         # unique batches actually evaluated
         self.baseline_cache = baseline_cache
         self._last_fast_check: Dict[str, int] = {}
+        # optional 1-axis peer mesh: row-parallel entry points shard
+        # their peer axis over it (module docstring, "Multi-device
+        # rounds"); None keeps the single-device path byte-for-byte
+        self.mesh = mesh
+        self._peer_axis = shd.PEER_AXIS
+        self._mesh_n = shd.peer_mesh_size(mesh)
         # sticky power-of-two padding buckets per data-dependent axis:
         # once a run has seen its high-water mark, every jitted entry
-        # point below holds ONE compiled shape across churn
+        # point below holds ONE compiled shape across churn. Mesh runs
+        # fold the device count into every bucket so shards divide evenly
         self._pad = padding.BucketTracker(minimum=hp.eval_pad_min,
-                                          cap=hp.eval_pad_cap)
+                                          cap=hp.eval_pad_cap,
+                                          multiple=self._mesh_n)
+        # aggregation is NOT row-sharded: its program is shared fleet-wide
+        # with (possibly mesh-less) peer replicas, so its buckets must not
+        # fold in the device count or a 3-device validator would disagree
+        # with its replicas on the compiled aggregate shape
+        self._agg_pad = padding.BucketTracker(minimum=hp.eval_pad_min,
+                                              cap=hp.eval_pad_cap)
         # traces per entry point: the wrapped impl bodies only run when
         # XLA (re)traces, so these are compile counts, not dispatches
         self.trace_counts: collections.Counter = collections.Counter()
         self._primary_arg_spec = None  # ShapeDtypeStructs of the last call
+        self._baseline_arg_spec = None
         chain.register_validator(uid, stake)
         # ---- proof-of-unique-work audit state (repro.audit) ----
         # replay audits need the training grad_fn; without it the stage
         # still runs commitment + fingerprint checks and falls back to
         # earliest-upload-wins inside similarity clusters
-        self._replayer = (ReplayAuditor(grad_fn, scheme, hp, params)
+        self._replayer = (ReplayAuditor(grad_fn, scheme, hp, params,
+                                        mesh=mesh)
                           if grad_fn is not None else None)
         self.audit_strikes: Dict[str, int] = {}   # uid -> rounds left zeroed
         # rolling (uids, sketches) of the last AUDIT_REF_ROUNDS evaluated
@@ -378,15 +419,28 @@ class Validator:
             self.stage_fast_filter, self.stage_uniqueness,
             self.stage_primary_eval, self.stage_scoreboard,
             self.stage_aggregate]
-        self._primary = jax.jit(self._traced("primary", functools.partial(
-            self._primary_scores, hp.eval_chunk)))
-        self._baselines = jax.jit(
-            self._traced("baselines", self._baselines_impl))
-        self._sync_scores = jax.jit(
-            self._traced("sync_scores", self._sync_scores_impl))
-        self._fingerprint = jax.jit(
-            self._traced("fingerprint", self._fingerprint_impl))
-        self._sketch = jax.jit(self._traced("sketch", self._sketch_impl))
+        # row-parallel entry points: with a mesh, wrap the impl in a
+        # shard_map that splits the listed arg positions (and every
+        # output) by rows over the peer axis; without one, jit the impl
+        # directly — the same trace as before this knob existed
+        def rows(fn, row_args):
+            return fn if mesh is None else shd.shard_map_rows(
+                mesh, fn, row_args)
+        self._primary = jax.jit(self._traced("primary", rows(
+            functools.partial(self._primary_scores, hp.eval_chunk),
+            (1, 4, 5, 9))))
+        self._baselines = jax.jit(self._traced("baselines", rows(
+            functools.partial(self._baselines_impl, hp.eval_chunk),
+            (3, 4))))
+        self._sync_scores = jax.jit(self._traced("sync_scores", rows(
+            self._sync_scores_impl, (1,))))
+        # fingerprint is the one stage needing a collective (pairwise
+        # cosine reads every row), so it gets a bespoke mesh variant
+        self._fingerprint = jax.jit(self._traced(
+            "fingerprint", self._fingerprint_impl if mesh is None
+            else self._fingerprint_mesh))
+        self._sketch = jax.jit(self._traced("sketch", rows(
+            self._sketch_impl, (0,))))
         # the SAME compiled aggregate program every peer replica uses —
         # bit-identity by construction, one compile per shape fleet-wide
         self._agg = scheme.shared_aggregate_apply(params)
@@ -429,7 +483,8 @@ class Validator:
             return fn(*args)
         return wrapped
 
-    def _baselines_impl(self, params, uniq_a, uniq_r, rows_a, rows_r):
+    def _baselines_impl(self, chunk, params, uniq_a, uniq_r,
+                        rows_a, rows_r):
         """Baseline losses L(θ, D) for the requested rows of the round's
         padded unique assigned / unassigned batch stacks (separate
         stacks — their shapes may differ), in one compiled call. The row
@@ -438,12 +493,26 @@ class Validator:
         wobbles with cache hits; padded rows re-score row 0 and are
         sliced away host-side. This is the part of primary eval that is
         identical across redundant validators, hence its own jit entry
-        point (skippable on a :class:`BaselineCache` hit)."""
-        sel_a = jax.tree.map(lambda u: u[rows_a], uniq_a)
-        sel_r = jax.tree.map(lambda u: u[rows_r], uniq_r)
-        base_a = jax.vmap(lambda b: self.eval_loss(params, b))(sel_a)
-        base_r = jax.vmap(lambda b: self.eval_loss(params, b))(sel_r)
-        return base_a, base_r
+        point (skippable on a :class:`BaselineCache` hit).
+
+        ``chunk`` (static, = ``hp.eval_chunk``) bounds memory the same
+        way it bounds primary eval: > 0 streams the row gathers through
+        ``lax.map`` over vmap blocks of ``chunk`` batches, so at most
+        ``chunk`` forward activations are live instead of the whole
+        unique-batch bucket's."""
+        def one_stack(uniq, rows):
+            n = rows.shape[0]
+            if chunk and chunk < n:
+                blocks = n // chunk
+                part = rows.reshape(blocks, chunk)
+                return jax.lax.map(
+                    lambda r: jax.vmap(
+                        lambda b: self.eval_loss(params, b))(
+                            jax.tree.map(lambda u: u[r], uniq)),
+                    part).reshape(n)
+            sel = jax.tree.map(lambda u: u[rows], uniq)
+            return jax.vmap(lambda b: self.eval_loss(params, b))(sel)
+        return one_stack(uniq_a, rows_a), one_stack(uniq_r, rows_r)
 
     def _primary_scores(self, chunk, params, stacked, uniq_a, uniq_r,
                         idx_a, idx_r, base_a, base_r, beta, valid):
@@ -499,6 +568,29 @@ class Validator:
         return (sk, fingerprint.cosine_matrix(sk, sk),
                 fingerprint.cosine_matrix(sk, ref))
 
+    def _fingerprint_mesh(self, stacked, ref):
+        """Mesh variant of :meth:`_fingerprint_impl`: each device
+        sketches its row slice of the payload stack (the expensive,
+        embarrassingly-parallel part), then ONE tiled all_gather shares
+        the tiny (K, fingerprint_dim) sketch matrix so every device can
+        compute its rows of the pairwise-cosine blocks. Row order is
+        device order, so outputs concatenate back exactly like the
+        single-device call."""
+        ax = self._peer_axis
+
+        def shard(stacked, ref):
+            sk_loc = fingerprint.sketch_pairs(
+                self.scheme.flatten_for_sketch(stacked),
+                self.audit_cfg.fingerprint_dim, self._sketch_seed)
+            sk = jax.lax.all_gather(sk_loc, ax, axis=0, tiled=True)
+            return (sk, fingerprint.cosine_matrix(sk_loc, sk),
+                    fingerprint.cosine_matrix(sk_loc, ref))
+
+        from repro.sharding import compat_shard_map
+        return compat_shard_map(
+            shard, self.mesh, (P(ax), P()),
+            (P(), P(ax), P(ax)), {ax})(stacked, ref)
+
     def _sketch_impl(self, stacked):
         """Sketches alone (replayed payloads get compared host-side)."""
         return fingerprint.sketch_pairs(
@@ -541,6 +633,23 @@ class Validator:
         chunk = self.hp.eval_chunk if eval_chunk is None else eval_chunk
         fn = jax.jit(functools.partial(self._primary_scores, chunk))
         ma = fn.lower(*self._primary_arg_spec).compile().memory_analysis()
+        temp = int(ma.temp_size_in_bytes)
+        args = int(ma.argument_size_in_bytes)
+        outs = int(ma.output_size_in_bytes)
+        return {"temp_bytes": temp, "argument_bytes": args,
+                "output_bytes": outs, "peak_bytes": temp + args + outs}
+
+    def baseline_memory_analysis(
+            self, eval_chunk: Optional[int] = None) -> Dict[str, int]:
+        """AOT footprint of the baseline entry point (same protocol as
+        :meth:`primary_memory_analysis`): ``eval_chunk`` compares the
+        full-vmap and lax.map-streamed unique-batch stacks on the last
+        round's operand shapes."""
+        if self._baseline_arg_spec is None:
+            return {}
+        chunk = self.hp.eval_chunk if eval_chunk is None else eval_chunk
+        fn = jax.jit(functools.partial(self._baselines_impl, chunk))
+        ma = fn.lower(*self._baseline_arg_spec).compile().memory_analysis()
         temp = int(ma.temp_size_in_bytes)
         args = int(ma.argument_size_in_bytes)
         outs = int(ma.output_size_in_bytes)
@@ -1017,9 +1126,12 @@ class Validator:
             mr = [i - na for i in missing if i >= na]
             rows_a = padding.pad_index(np.asarray(ma, np.int32), bucket)
             rows_r = padding.pad_index(np.asarray(mr, np.int32), bucket)
-            got_a, got_r = self._baselines(self.params, ua, ur,
-                                           jnp.asarray(rows_a),
-                                           jnp.asarray(rows_r))
+            args = (self.params, ua, ur, jnp.asarray(rows_a),
+                    jnp.asarray(rows_r))
+            self._baseline_arg_spec = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                               jnp.asarray(x).dtype), args)
+            got_a, got_r = self._baselines(*args)
             self.compiled_calls += 1
             self.baseline_calls += 1
             self.baseline_rows += len(missing)
@@ -1053,7 +1165,9 @@ class Validator:
         # batch 0 — valid inputs whose outputs are never gathered) and
         # the per-peer index/mask vectors to the peer bucket, so primary
         # + baselines hold one compiled shape as the dedup count wobbles
-        bucket_u = self._pad.get("uniq", max(na, len(uniq_r)))
+        # (a multiple of eval_chunk so the chunked baselines divide)
+        bucket_u = self._pad.get("uniq", max(na, len(uniq_r)),
+                                 multiple=max(hp.eval_chunk, 1))
         ua = padding.pad_axis0(_stack_batches(uniq_a), bucket_u, edge=True)
         ur = padding.pad_axis0(_stack_batches(uniq_r), bucket_u, edge=True)
         base_a, base_r = self._resolve_baselines(ukeys, na, ua, ur)
@@ -1151,12 +1265,12 @@ class Validator:
                 return ctx
             stacked = self.scheme.pad_payloads(
                 self.scheme.stack_payloads(payloads),
-                self._pad.get("agg_stack", len(payloads)))
+                self._agg_pad.get("agg_stack", len(payloads)))
             rows = list(range(len(payloads)))
         # pad the contributor rows to the sticky bucket with zero-weight
         # row-0 gathers: exact no-op contributions, one compiled shape
         n = len(rows)
-        bucket = self._pad.get("agg", n)
+        bucket = self._agg_pad.get("agg", n)
         weights = np.zeros(bucket, np.float32)
         weights[:n] = 1.0 / n
         self.params = self._agg(
@@ -1176,8 +1290,13 @@ class Validator:
                             fast_set_size=fast_set_size)
 
     def run_stages(self, ctx: RoundContext) -> RoundContext:
+        self.last_stage_ms = {}
         for stage in self.stages:
+            t0 = time.perf_counter()
             ctx = stage(ctx)
+            name = getattr(stage, "__name__", repr(stage))
+            self.last_stage_ms[name.replace("stage_", "")] = (
+                time.perf_counter() - t0) * 1e3
         return ctx
 
     def run_round(self, round_idx: int, active_peers: List[str],

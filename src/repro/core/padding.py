@@ -53,16 +53,27 @@ def pow2_bucket(n: int, minimum: int = 1, multiple: int = 1,
 class BucketTracker:
     """Sticky per-axis buckets: monotone non-decreasing, so every jitted
     entry point settles on ONE compiled shape once the run has seen its
-    high-water mark (a shrinking round reuses the larger trace)."""
+    high-water mark (a shrinking round reuses the larger trace).
 
-    def __init__(self, minimum: int = 1, cap: int = 0):
+    ``multiple`` is a tracker-wide divisibility floor that COMPOSES
+    MULTIPLICATIVELY with each call's ``multiple``: a mesh-sharded
+    validator needs every bucket divisible by the device count AND the
+    per-device slice divisible by the call's chunk size, i.e.
+    ``(mesh * chunk) | bucket`` — an lcm would let e.g. chunk=6, mesh=4
+    produce a bucket of 36 whose per-device slice of 9 the chunked
+    ``lax.map`` cannot partition."""
+
+    def __init__(self, minimum: int = 1, cap: int = 0, multiple: int = 1):
         self.minimum = minimum
         self.cap = cap
+        self.multiple = max(int(multiple), 1)
         self._sizes: Dict[str, int] = {}
 
     def get(self, axis: str, n: int, multiple: int = 1) -> int:
         bucket = max(self._sizes.get(axis, 0),
-                     pow2_bucket(n, self.minimum, multiple, self.cap))
+                     pow2_bucket(n, self.minimum,
+                                 max(multiple, 1) * self.multiple,
+                                 self.cap))
         self._sizes[axis] = bucket
         return bucket
 

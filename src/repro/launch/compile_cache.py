@@ -1,0 +1,56 @@
+"""Persistent XLA compilation cache for the validator's round programs.
+
+The Gauntlet's cold-start cost is compilation, not math: BENCH_gauntlet
+shows 20-32 s of ``compile_round_ms`` against ~3 s steady rounds. The
+programs themselves are stable across runs (sticky pow2 buckets pin the
+shapes), so a persistent on-disk cache makes round 1 of run 2 warm — the
+second process pays tracing/lowering only and loads the executables.
+
+``enable_compile_cache`` is safe to call unconditionally:
+
+* With an explicit ``path`` it turns the cache on at that directory.
+* With ``path=None`` it consults the ``REPRO_COMPILE_CACHE`` env var and
+  is a NO-OP when that is unset — callers on the hot import path (the
+  sim engine, the bench) can invoke it without changing default
+  behaviour or touching jax config for users who didn't opt in.
+
+The thresholds are floored to zero/-1 so even the tiny CI-sized round
+programs (sub-second compiles) are cached; the default jax thresholds
+would skip exactly the programs the bench measures.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+ENV_VAR = "REPRO_COMPILE_CACHE"
+
+_enabled_at: Optional[str] = None
+
+
+def enable_compile_cache(path: Optional[str] = None,
+                         min_compile_secs: float = 0.0) -> Optional[str]:
+    """Point jax's persistent compilation cache at ``path`` (or at
+    ``$REPRO_COMPILE_CACHE``; no-op if both are unset). Returns the
+    directory in effect, or None when disabled. Idempotent."""
+    global _enabled_at
+    if path is None:
+        path = os.environ.get(ENV_VAR) or None
+    if path is None:
+        return _enabled_at
+    path = os.path.abspath(path)
+    if _enabled_at == path:
+        return path
+
+    import jax
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                      float(min_compile_secs))
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    try:
+        jax.config.update("jax_persistent_cache_enable_xla_caches", "all")
+    except AttributeError:
+        pass  # knob landed after jax 0.4.3x; the main cache still works
+    _enabled_at = path
+    return path

@@ -17,17 +17,50 @@ HBM_BW = 819e9                      # bytes/s per chip
 ICI_BW = 50e9                       # bytes/s per link
 
 
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where the jax
+    version supports them; older jax has neither ``AxisType`` nor the
+    ``axis_types`` kwarg, and Auto is its only behaviour anyway."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` where the jax version has it; older jax
+    uses the mesh object itself as the context manager."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over the real local device(s) for tests/examples."""
     n = len(jax.devices())
     data = min(data, n)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
+
+
+def make_peer_mesh(devices: int = 0):
+    """1-axis validator mesh: the Gauntlet's round entry points shard
+    their *scored-peer* dimension over this axis (sharding.PEER_AXIS).
+
+    ``devices`` clamps to the locally visible device count; 0 takes all
+    of them. On CPU CI the count is forced up front with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (device count
+    is locked at first jax init, so the env var must be set before any
+    jax call — see tests/test_steps_distributed.py for the subprocess
+    pattern)."""
+    from repro.sharding import PEER_AXIS
+    n = len(jax.devices())
+    if devices:
+        n = min(int(devices), n)
+    return compat_make_mesh((n,), (PEER_AXIS,))

@@ -27,8 +27,11 @@ from repro.configs.base import InputShape, ModelConfig, TrainConfig
 from repro.demo import adamw, dct
 from repro.demo.schedules import warmup_cosine
 from repro.models import model as M
-# the production DeMo mesh step is scheme-specific by design: it IS the
-# demo scheme's codec lowered onto the mesh (all_gather of Payload trees)
+# the tuned production step is DeMo-specific by design: it IS the demo
+# scheme's codec lowered onto the mesh (all_gather of Payload trees).
+# Other schemes lower through make_scheme_train_step, which reuses the
+# same _peer_round_plan scaffold with the scheme's own local_step/
+# aggregate_apply in the per-peer body.
 from repro.schemes import demo as demo_opt
 
 
@@ -124,7 +127,8 @@ class StepPlan:
         if self.donate:
             kw["donate_argnums"] = self.donate
         from repro.hints import axis_hints
-        with jax.set_mesh(mesh), axis_hints(
+        from repro.launch.mesh import mesh_context
+        with mesh_context(mesh), axis_hints(
                 **(self.hints or {"head": "model"})):
             return jax.jit(self.fn, in_shardings=in_shardings,
                            **kw).lower(*self.args)
@@ -190,6 +194,48 @@ def _inner_groups(cfg: ModelConfig, mesh) -> int:
         if a not in peers and a != "model":
             g *= shape[a]
     return g
+
+
+# ------------------------------------------------------------ peer round
+
+
+def _peer_round_plan(cfg: ModelConfig, mesh, *, name: str,
+                     per_peer: Callable, p_sds, pspecs,
+                     state_sds, state_specs, batch_sds,
+                     donate: bool, hints) -> StepPlan:
+    """Shared shard_map scaffolding for ONE communication round over the
+    mesh peer axes: params replicated across peers, per-peer state and
+    batch split on their leading axis, loss pmean'd inside ``per_peer``.
+
+    ``per_peer(params, state, batch, step_idx)`` runs in manual mode on
+    one peer's shard (state/batch leading axis = 1 locally) and returns
+    ``(new_params, new_state, loss)`` with the same layout. Both the
+    DeMo step and the scheme-generic step are this scaffold plus a
+    different ``per_peer`` body — the specs construction, shard_map
+    plumbing and StepPlan assembly are identical by construction.
+    """
+    peers = sh.effective_peer_axes(cfg, mesh)
+    manual_p = jax.tree.map(lambda _: P(), p_sds)
+    manual_s = jax.tree.map(lambda _: P(peers), state_sds)
+    manual_b = jax.tree.map(
+        lambda l: P(peers, *(None,) * (l.ndim - 1)), batch_sds)
+    bspecs = sh.batch_specs(cfg, batch_sds, peers, mesh)
+
+    def step(params, state, batch, step_idx):
+        return sh.compat_shard_map(
+            per_peer, mesh,
+            (manual_p, manual_s, manual_b, P()),
+            (manual_p, manual_s, P()),
+            set(peers))(params, state, batch, step_idx)
+
+    return StepPlan(
+        name=name, fn=step,
+        args=(_sds_like(p_sds), _sds_like(state_sds), batch_sds,
+              jax.ShapeDtypeStruct((), jnp.int32)),
+        in_specs=(pspecs, state_specs, bspecs, P()),
+        out_specs=(pspecs, state_specs, P()),
+        donate=(0, 1) if donate else (),
+        hints=hints)
 
 
 # ----------------------------------------------------------------- DeMo
@@ -293,32 +339,17 @@ def make_demo_train_step(cfg: ModelConfig, hp: TrainConfig, mesh,
             loss = jax.lax.pmean(loss, peers)
             return new_params, jax.tree.map(lambda e: e[None], new_ef), loss
 
+        # EF buffers ride the param sharding under the leading peer axis
+        # (a DeMo-tuned layout the generic scaffold lets us keep)
         efspecs = jax.tree.map(
             lambda s: P(peers if peers else None, *s), pspecs)
-        manual_p = jax.tree.map(lambda _: P(), p_sds)
-        manual_ef = jax.tree.map(lambda _: P(peers), p_sds)
-        bspecs = sh.batch_specs(cfg, batch_sds, peers, mesh)
-        manual_b = jax.tree.map(
-            lambda l: P(peers, *(None,) * (l.ndim - 1)), batch_sds)
-
-        def step(params, ef, batch, step_idx):
-            return jax.shard_map(
-                per_peer, mesh=mesh,
-                in_specs=(manual_p, manual_ef, manual_b, P()),
-                out_specs=(manual_p, manual_ef, P()),
-                axis_names=set(peers), check_vma=False,
-            )(params, ef, batch, step_idx)
-
         ef_sds = jax.tree.map(
             lambda l: jax.ShapeDtypeStruct((K,) + l.shape, ef_dtype), p_sds)
-        return StepPlan(
-            name=f"demo_train[{cfg.name}|{shape.name}]", fn=step,
-            args=(_sds_like(p_sds), ef_sds, batch_sds,
-                  jax.ShapeDtypeStruct((), jnp.int32)),
-            in_specs=(pspecs, efspecs, bspecs, P()),
-            out_specs=(pspecs, efspecs, P()),
-            donate=(0, 1) if donate else (),
-            hints=step_hints(cfg, mesh))
+        return _peer_round_plan(
+            cfg, mesh, name=f"demo_train[{cfg.name}|{shape.name}]",
+            per_peer=per_peer, p_sds=p_sds, pspecs=pspecs,
+            state_sds=ef_sds, state_specs=efspecs, batch_sds=batch_sds,
+            donate=donate, hints=step_hints(cfg, mesh))
 
     # ---- degenerate single peer (e.g. deepseek-v2 on one pod):
     # gradient over the whole mesh (GSPMD all-reduces over 'data'); the
@@ -344,6 +375,105 @@ def make_demo_train_step(cfg: ModelConfig, hp: TrainConfig, mesh,
               jax.ShapeDtypeStruct((), jnp.int32)),
         in_specs=(pspecs, pspecs, bspecs, P()),
         out_specs=(pspecs, pspecs, P()),
+        donate=(0, 1) if donate else (),
+        hints=step_hints(cfg, mesh))
+
+
+# ---------------------------------------------------------- any scheme
+
+
+def make_scheme_train_step(cfg: ModelConfig, hp: TrainConfig, mesh,
+                           shape: InputShape, scheme=None,
+                           remat: bool = True, ce_chunks: int = 0,
+                           scan_layers: Optional[bool] = None,
+                           donate: bool = True,
+                           microbatch: int = 1) -> StepPlan:
+    """Scheme-generic communication round on the mesh: per-peer grad →
+    ``scheme.local_step`` → all_gather of the payload pytree →
+    ``scheme.aggregate_apply`` — the same scaffold the DeMo step uses
+    (:func:`_peer_round_plan`), for ANY registered
+    :class:`repro.schemes.GradScheme`. rand-k's flat-index payload
+    all_gathers and scatter-adds exactly like DeMo's DCT grids because
+    both are pytrees of fixed-shape arrays; the peer's local batch seeds
+    its index selection, so per-peer layouts differ on the mesh just as
+    they do in the simulator.
+
+    ``scheme`` defaults to ``make_scheme(hp, param_shapes)`` —
+    ``hp.scheme`` picks it. Unlike the DeMo-tuned step, per-peer state
+    is replicated across any model axes (P(peers) on the leading axis
+    only): correct everywhere, merely less sharded than a scheme-aware
+    layout could be.
+    """
+    from repro.schemes import make_scheme
+    scan = use_scan(cfg) if scan_layers is None else scan_layers
+    peers = sh.effective_peer_axes(cfg, mesh)
+    K = sh.num_peers(cfg, mesh)
+    p_sds = stacked_param_shapes(cfg) if scan else param_shapes(cfg)
+    pspec_fn = sh.stacked_param_specs if scan else sh.param_specs
+    pspecs = pspec_fn(cfg, p_sds, mesh)
+    batch_sds = input_specs(cfg, shape)
+    ng = _inner_groups(cfg, mesh)
+    if scheme is None:
+        scheme = make_scheme(hp, p_sds)
+
+    def loss_of(params, batch):
+        return M.loss_fn(params, batch, cfg, num_groups=ng, remat=remat,
+                         ce_chunks=ce_chunks, scan_layers=scan)[0]
+
+    grad_of = make_grad_fn(loss_of, microbatch)
+    state_sds0 = jax.eval_shape(scheme.init_state, p_sds)
+    name = f"{scheme.name}_train[{cfg.name}|{shape.name}]"
+
+    if peers:
+        def per_peer(params, state, batch, step_idx):
+            lr = warmup_cosine(step_idx, base_lr=hp.learning_rate,
+                               warmup_steps=hp.warmup_steps,
+                               total_steps=hp.total_steps)
+            state_local = jax.tree.map(lambda s: s[0], state)
+            loss, grads = grad_of(params, batch)
+            payload, new_state = scheme.local_step(grads, state_local,
+                                                   batch=batch)
+            gathered = jax.tree.map(
+                lambda x: jax.lax.all_gather(x, peers, axis=0,
+                                             tiled=False), payload)
+            new_params = scheme.aggregate_apply(
+                params, gathered, jnp.arange(K, dtype=jnp.int32), lr)
+            loss = jax.lax.pmean(loss, peers)
+            return (new_params,
+                    jax.tree.map(lambda s: s[None], new_state), loss)
+
+        # every state leaf (incl. scalars like a step counter) carries a
+        # leading peer axis so one spec tree covers any scheme's state
+        state_sds = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((K,) + l.shape, l.dtype),
+            state_sds0)
+        state_specs = jax.tree.map(lambda _: P(peers), state_sds)
+        return _peer_round_plan(
+            cfg, mesh, name=name, per_peer=per_peer, p_sds=p_sds,
+            pspecs=pspecs, state_sds=state_sds, state_specs=state_specs,
+            batch_sds=batch_sds, donate=donate,
+            hints=step_hints(cfg, mesh))
+
+    # degenerate single peer: K=1, no collective, same scheme math
+    def step1(params, state, batch, step_idx):
+        lr = warmup_cosine(step_idx, base_lr=hp.learning_rate,
+                           warmup_steps=hp.warmup_steps,
+                           total_steps=hp.total_steps)
+        loss, grads = grad_of(params, batch)
+        payload, new_state = scheme.local_step(grads, state, batch=batch)
+        stacked = jax.tree.map(lambda x: x[None], payload)
+        new_params = scheme.aggregate_apply(
+            params, stacked, jnp.arange(1, dtype=jnp.int32), lr)
+        return new_params, new_state, loss
+
+    state_specs = jax.tree.map(lambda _: P(), state_sds0)
+    bspecs = sh.batch_specs(cfg, batch_sds, sh.dp_axes_for_serving(mesh))
+    return StepPlan(
+        name=name, fn=step1,
+        args=(_sds_like(p_sds), _sds_like(state_sds0), batch_sds,
+              jax.ShapeDtypeStruct((), jnp.int32)),
+        in_specs=(pspecs, state_specs, bspecs, P()),
+        out_specs=(pspecs, state_specs, P()),
         donate=(0, 1) if donate else (),
         hints=step_hints(cfg, mesh))
 
@@ -476,6 +606,10 @@ def make_step(cfg: ModelConfig, hp: TrainConfig, mesh, shape: InputShape,
     if shape.kind == "train":
         if variant == "ddp":
             return make_ddp_train_step(cfg, hp, mesh, shape, **kw)
+        # non-demo schemes (or an explicit variant="scheme") take the
+        # scheme-generic mesh round; "demo" keeps its tuned step
+        if variant == "scheme" or getattr(hp, "scheme", "demo") != "demo":
+            return make_scheme_train_step(cfg, hp, mesh, shape, **kw)
         return make_demo_train_step(cfg, hp, mesh, shape, **kw)
     if shape.kind == "prefill":
         return make_prefill_step(cfg, mesh, shape)

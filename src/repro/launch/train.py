@@ -21,7 +21,8 @@ from repro.configs.base import InputShape, TrainConfig
 from repro.configs.registry import (ASSIGNED_ARCHS, get_config,
                                     reduced_config)
 from repro.data import pipeline
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               mesh_context)
 from repro.launch.steps import make_step
 from repro.models import model as M
 from repro.training.checkpoint import SignedUpdateLog, save_checkpoint
@@ -75,7 +76,7 @@ def main(argv=None):
     state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                          plan.args[1])
     log = SignedUpdateLog()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for step_i in range(args.steps):
             batch = pipeline.select_data(corpus, hp.seed, "launcher",
                                          step_i, args.batch, args.seq)

@@ -128,6 +128,24 @@ class GradScheme:
         """§3.2 check (c): structure, shapes, dtypes, value sanity."""
         raise NotImplementedError
 
+    def _value_check(self, payload):
+        """Traceable value-sanity predicate: ONE boolean scalar over the
+        whole payload (finite values, in-range indices, ...). Subclasses
+        implement it; :meth:`_values_ok` jits + fuses it so the host
+        pays one dispatch and one device sync per payload — the naive
+        per-leaf ``bool(...)`` reads were 3 blocking syncs per leaf and
+        dominated fast-filter wall time at large F_t."""
+        raise NotImplementedError
+
+    def _values_ok(self, payload) -> bool:
+        """Host entry for :meth:`_value_check` — cached jit per scheme
+        instance (payload shapes are fixed by the instance's param tree,
+        so one compiled predicate serves every peer)."""
+        fn = self.__dict__.get("_value_ok_jit")
+        if fn is None:
+            fn = self.__dict__["_value_ok_jit"] = jax.jit(self._value_check)
+        return bool(fn(payload))
+
     # ------------------------------------------------------------ audit
     def flatten_for_sketch(self, stacked) -> List[Tuple[Any, Any]]:
         """(values, position-ids) pairs for the count-sketch

@@ -349,14 +349,20 @@ class DemoScheme(GradScheme):
                     return False
                 if p.idx.dtype != jnp.int32:
                     return False
-                if not bool(jnp.isfinite(p.vals).all()):
-                    return False
-                if bool((p.idx < 0).any()) or bool(
-                        (p.idx >= m.s * m.s).any()):
-                    return False
-            return True
+            # value sanity fused into one jitted scalar (one sync total,
+            # not 3 blocking reads per leaf — see GradScheme._values_ok)
+            return self._values_ok(payload)
         except Exception:
             return False
+
+    def _value_check(self, payload):
+        flat_p = jax.tree.leaves(payload, is_leaf=_is_payload)
+        flat_m = jax.tree.leaves(self.metas)
+        ok = jnp.bool_(True)
+        for p, m in zip(flat_p, flat_m):
+            ok &= jnp.isfinite(p.vals).all()
+            ok &= (p.idx >= 0).all() & (p.idx < m.s * m.s).all()
+        return ok
 
     # ------------------------------------------------------------ audit
     def flatten_for_sketch(self, stacked):

@@ -345,6 +345,60 @@ def grouped_cache_specs(cfg: ModelConfig, gcache: DecodeCache, mesh,
     return DecodeCache(layer_caches=tuple(layer), cross_kv=cross)
 
 
+# ------------------------------------------------------ validator mesh
+
+# Axis name of the validator's peer mesh (see launch.mesh.make_peer_mesh).
+# Distinct from the training mesh's "data" axis: the validator shards the
+# *scored-peer* dimension of its round entry points, not the batch.
+PEER_AXIS = "peers"
+
+
+def peer_mesh_size(mesh) -> int:
+    """Device count along the validator peer axis (1 for mesh=None)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(PEER_AXIS, 1))
+
+
+def compat_shard_map(fn, mesh, in_specs, out_specs, axis_names):
+    """``shard_map`` across jax versions, same semantics either way:
+    manual over ``axis_names``, auto over the rest, no replication/VMA
+    check. Newer jax exposes it at top level (``axis_names``/
+    ``check_vma``); older releases ship ``jax.experimental.shard_map``
+    where the manual set is 'every mesh axis minus ``auto``'."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(axis_names), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False,
+               auto=frozenset(mesh.axis_names) - set(axis_names))
+
+
+def shard_map_rows(mesh, fn, row_args, axis: str = PEER_AXIS):
+    """Row-parallel shard_map wrapper for the Gauntlet's jitted stages.
+
+    Positional args whose index is in ``row_args`` are split along axis 0
+    over the mesh's ``axis`` (P(axis) as a pytree-prefix spec, so whole
+    payload/batch pytrees shard by rows); everything else is replicated.
+    Every output is row-sharded and concatenates back in device order,
+    i.e. original row order. ``fn`` must be collective-free and
+    row-independent — each of the validator's padded entry points is,
+    because PR-4's masked padding rows are exact no-ops, so any
+    row-aligned slice of the bucket computes independently.
+    """
+    row_args = frozenset(row_args)
+
+    def wrapped(*args):
+        in_specs = tuple(P(axis) if i in row_args else P()
+                         for i in range(len(args)))
+        return compat_shard_map(fn, mesh, in_specs, P(axis),
+                                {axis})(*args)
+
+    return wrapped
+
+
 # ----------------------------------------------------------------- utils
 
 

@@ -333,7 +333,8 @@ class SimEngine:
                       eval_batch: int = 8,
                       eval_every: Optional[int] = None,
                       blocks_per_round: int = 10,
-                      eval_chunk: int = 0) -> "SimEngine":
+                      eval_chunk: int = 0,
+                      mesh_devices: int = 0) -> "SimEngine":
         """Wire a complete testnet from a declarative scenario.
 
         ``eval_chunk`` (ignored when ``hp`` is supplied) bounds each
@@ -341,13 +342,25 @@ class SimEngine:
         time — the knob for running wide eval sets on small validator
         hardware (see ``hp.eval_chunk``). ``scenario.scheme`` selects the
         gradient scheme (repro.schemes registry) when ``hp`` is not
-        supplied; with an explicit ``hp``, ``hp.scheme`` wins."""
+        supplied; with an explicit ``hp``, ``hp.scheme`` wins.
+
+        ``mesh_devices`` > 0 gives every validator a peer mesh over that
+        many local devices (``launch.mesh.make_peer_mesh``): the round
+        entry points shard their peer axis and an N-device validator
+        scores ~N× peers per wall-clock round. Results are bit-identical
+        to ``mesh_devices=0`` on one device. Set ``REPRO_COMPILE_CACHE``
+        to a directory to also persist compiled round programs across
+        runs (warm start on run 2)."""
         from repro.configs.base import TrainConfig
         from repro.configs.registry import tiny_config
         from repro.data import pipeline
+        from repro.launch.compile_cache import enable_compile_cache
+        from repro.launch.mesh import make_peer_mesh
         from repro.models import model as M
         from repro.schemes import make_scheme
 
+        enable_compile_cache()          # no-op unless the env var is set
+        mesh = make_peer_mesh(mesh_devices) if mesh_devices else None
         cfg = cfg or tiny_config()
         n_specs = len(scenario.peers)
         hp = hp or TrainConfig(
@@ -380,7 +393,7 @@ class SimEngine:
                       rng=np.random.RandomState(
                           (scenario.seed * 7919
                            + zlib.crc32(vs.uid.encode())) % (2 ** 31)),
-                      baseline_cache=cache, grad_fn=grad_fn)
+                      baseline_cache=cache, grad_fn=grad_fn, mesh=mesh)
             for vs in scenario.validators]
         telemetry = Telemetry(scenario.name, scenario.seed, meta={
             "model": cfg.name, "params": cfg.param_count(),

@@ -113,7 +113,7 @@ def shared_local_step(scheme: GradScheme, grad_fn: Callable,
 
 
 def shared_replay_step(scheme: GradScheme, grad_fn: Callable,
-                       params) -> Callable:
+                       params, mesh=None) -> Callable:
     """One jitted **vmapped** replay program per (grad_fn, scheme knobs,
     tree structure): ``(params, batches_with_leading_K)`` — one gradient
     + scheme compression per row, zero error-feedback state.
@@ -123,8 +123,20 @@ def shared_replay_step(scheme: GradScheme, grad_fn: Callable,
     checks across all audited peers become ONE dispatch instead of O(k)
     sequential local-step calls. Cached alongside the scalar program so
     a fleet of same-shape validators compiles it once.
+
+    ``mesh`` (a peer mesh, see :func:`repro.launch.mesh.make_peer_mesh`)
+    shard_maps the audited-peer axis over the mesh devices — one local
+    step per row is collective-free, so each device replays its slice.
+    The caller must pad the leading axis to a multiple of the mesh size
+    (:class:`repro.audit.replay.ReplayAuditor` folds it into its sticky
+    bucket). The mesh participates in the cache key: mesh and no-mesh
+    validators over one grad_fn get distinct programs.
     """
-    key = ("replay", scheme.cache_key(), *tree_signature(params))
+    mesh_sig = None if mesh is None else \
+        (tuple(dict(mesh.shape).items()),
+         tuple(d.id for d in mesh.devices.flat))
+    key = ("replay", scheme.cache_key(), mesh_sig,
+           *tree_signature(params))
     per_grad = _LOCAL_JIT_CACHE.setdefault(grad_fn, {})
     fn = per_grad.get(key)
     if fn is None:
@@ -140,6 +152,10 @@ def shared_replay_step(scheme: GradScheme, grad_fn: Callable,
                                                batch=b)
                 return payload
             return jax.vmap(one)(batches)
+
+        if mesh is not None:
+            from repro.sharding import shard_map_rows
+            impl = shard_map_rows(mesh, impl, row_args=(1,))
         fn = per_grad[key] = jax.jit(impl)
     return fn
 

@@ -39,8 +39,10 @@ def build_sim(cfg: ModelConfig, hp: TrainConfig,
               peer_configs: List[PeerConfig],
               batch: int = 8, seq_len: int = 128,
               corpus: Optional[pipeline.MarkovCorpus] = None,
-              eval_batch: int = 8):
-    """Wire up a complete permissionless run."""
+              eval_batch: int = 8, mesh=None):
+    """Wire up a complete permissionless run. ``mesh`` (an optional peer
+    mesh, see ``launch.mesh.make_peer_mesh``) shards the validator's
+    round entry points over its devices."""
     corpus = corpus or pipeline.MarkovCorpus(cfg.vocab_size, seed=hp.seed)
     chain = Chain(blocks_per_round=10, genesis_seed=hp.seed)
     store = BucketStore(chain)
@@ -64,7 +66,7 @@ def build_sim(cfg: ModelConfig, hp: TrainConfig,
     validator = Validator("validator-0", params, scheme, eval_loss_j, hp,
                           chain, store, data_fns,
                           rng=np.random.RandomState(hp.seed),
-                          grad_fn=grad_fn)
+                          grad_fn=grad_fn, mesh=mesh)
     peers = {}
     for pc in peer_configs:
         peers[pc.uid] = PeerNode(pc, params, scheme, grad_fn, hp, chain,

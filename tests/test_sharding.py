@@ -12,12 +12,21 @@ from repro.configs.shapes import SHAPES
 from repro.launch import steps
 
 
+def _abstract_mesh(shape, axes):
+    try:
+        return AbstractMesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        # older jax: AbstractMesh takes ((name, size), ...) pairs and has
+        # no AxisType (Auto is the only behaviour)
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def _mesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def _check_divisible(spec_tree, sds_tree, mesh):

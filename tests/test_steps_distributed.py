@@ -8,9 +8,21 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# the 2-axis (data x model) step shards only the peer axis manually and
+# leaves "model" to auto propagation; on jax<0.5 the legacy
+# experimental shard_map's partial-auto mode aborts inside the XLA SPMD
+# partitioner (IsManualSubgroup CHECK). The legacy fallback in
+# repro.sharding.compat_shard_map is only exercised on 1-axis peer
+# meshes (tests/test_gauntlet_mesh.py); CI's current jax runs this file.
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-auto shard_map crashes the SPMD partitioner on "
+           "jax<0.5 (IsManualSubgroup check)")
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -21,13 +33,13 @@ SCRIPT = textwrap.dedent("""
     from repro.configs.base import TrainConfig, InputShape
     from repro.launch.steps import make_demo_train_step, make_ddp_train_step
     from repro.launch import analysis
+    from repro.launch.mesh import compat_make_mesh, mesh_context
 
     cfg = tiny_config(num_layers=2, d_model=128, d_ff=256, vocab_size=512
                       ).with_overrides(peer_axes=("data",))
     hp = TrainConfig(learning_rate=1e-2, warmup_steps=0, total_steps=100,
                      demo_chunk=16, demo_topk=8)
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((4, 4), ("data", "model"))
     shape = InputShape("t", seq_len=128, global_batch=8, kind="train")
 
     # donate=False: this test re-reads `params` after the call (donation
@@ -45,7 +57,7 @@ SCRIPT = textwrap.dedent("""
         "tokens": jax.random.randint(key, (8, 128), 0, 512),
         "labels": jax.random.randint(key, (8, 128), 0, 512),
     }
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         new_params, new_ef, loss = compiled(params, ef, batch,
                                             jnp.int32(10))
     out = {}
@@ -70,8 +82,7 @@ SCRIPT = textwrap.dedent("""
 
     # pure data-parallel mesh isolates CROSS-PEER traffic (the paper's
     # quantity): no TP weight-gathers mixed in.
-    mesh_dp = jax.make_mesh((16, 1), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_dp = compat_make_mesh((16, 1), ("data", "model"))
     shape_dp = InputShape("t", seq_len=128, global_batch=16, kind="train")
     cbd = analysis.collective_bytes(
         make_demo_train_step(cfg, hp, mesh_dp, shape_dp, remat=False)
