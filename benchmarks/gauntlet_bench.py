@@ -97,7 +97,7 @@ STAGES = ("fast_filter", "uniqueness", "primary_eval", "scoreboard",
 
 
 def build(num_peers: int, eval_chunk: int, scheme_name: str,
-          mesh_devices: int = 0, seed: int = 0):
+          mesh_devices: int = 0, seed: int = 0, obs=None):
     cfg = tiny_config()
     hp = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=1000,
                      top_g=min(4, num_peers), eval_set_size=num_peers,
@@ -118,7 +118,8 @@ def build(num_peers: int, eval_chunk: int, scheme_name: str,
     mesh = make_peer_mesh(mesh_devices) if mesh_devices else None
     validator = Validator("validator-0", params, scheme, eval_loss, hp,
                           chain, store, data_fns,
-                          rng=np.random.RandomState(seed), mesh=mesh)
+                          rng=np.random.RandomState(seed), mesh=mesh,
+                          obs=obs)
     uids = [f"peer-{i:04d}" for i in range(num_peers)]
     for uid in uids:
         chain.register_peer(uid, store.create_bucket(uid))
@@ -171,9 +172,9 @@ def live_memory_stats():
 
 
 def bench(num_peers: int, rounds: int, eval_chunk: int,
-          scheme: str = "demo", mesh_devices: int = 0):
+          scheme: str = "demo", mesh_devices: int = 0, obs=None):
     validator, chain, store, uids, fabricate = build(
-        num_peers, eval_chunk, scheme, mesh_devices)
+        num_peers, eval_chunk, scheme, mesh_devices, obs=obs)
     mesh_n = peer_mesh_size(validator.mesh) if mesh_devices else 0
     sizes = eval_sizes(num_peers, rounds)
     times, calls, stage_rows = [], [], []
@@ -321,6 +322,10 @@ def main():
     ap.add_argument("--check", default=None, metavar="PATH",
                     help="committed trajectory to regress against "
                          "(fails on regression)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the span tracer's Chrome trace JSON for "
+                         "the LAST bench leg (open in ui.perfetto.dev) "
+                         "— bench regressions come with a profile")
     ap.add_argument("--mem-band", type=float, default=0.25,
                     help="allowed relative growth of AOT memory bytes")
     ap.add_argument("--latency-band", type=float, default=4.0,
@@ -333,13 +338,28 @@ def main():
     args = ap.parse_args()
     if args.compile_cache:
         enable_compile_cache(args.compile_cache)
-    rows = []
+    legs = []
     for md in args.mesh_devices:
         peer_list = (args.mesh_peers if md and args.mesh_peers is not None
                      else args.peers)
-        for n in peer_list:
-            rows.append(bench(n, args.rounds, args.eval_chunk,
-                              args.scheme, mesh_devices=md))
+        legs.extend((md, n) for n in peer_list)
+    # --trace-out: attach the flight recorder's span tracer to the last
+    # leg only — one profiled leg, zero overhead on the timed sweep
+    trace_obs = None
+    if args.trace_out:
+        from repro.obs import FlightRecorder
+        trace_obs = FlightRecorder(trace=True)
+    rows = []
+    for i, (md, n) in enumerate(legs):
+        obs = trace_obs if (trace_obs is not None
+                            and i == len(legs) - 1) else None
+        rows.append(bench(n, args.rounds, args.eval_chunk,
+                          args.scheme, mesh_devices=md, obs=obs))
+    if trace_obs is not None:
+        trace_obs.tracer.to_chrome_json(args.trace_out)
+        print(f"Chrome trace of leg {legs[-1]} -> {args.trace_out} "
+              f"({trace_obs.tracer.xla_compile_s:.1f}s attributed "
+              f"compile; open in https://ui.perfetto.dev)")
     common.emit("gauntlet_bench", rows,
                 ["peers", "mesh_devices", "compile_round_ms",
                  "steady_round_ms", "ms_per_peer",

@@ -52,10 +52,11 @@ def _local_programs() -> int:
     return sum(len(d) for d in peer_mod._LOCAL_JIT_CACHE.values())
 
 
-def bench_churn(num_peers: int, rounds: int):
+def bench_churn(num_peers: int, rounds: int, obs=None):
     cache_before = _local_programs()
     engine = SimEngine.from_scenario(
-        churn_scenario(num_peers, rounds), _cfg(), batch=2, seq_len=32)
+        churn_scenario(num_peers, rounds), _cfg(), batch=2, seq_len=32,
+        obs=obs)
     v = list(engine.validators.values())[0]
     t0 = time.perf_counter()
     engine.run_round(0)                       # compile round
@@ -114,9 +115,24 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--peers", type=int, nargs="*", default=[8, 16, 32])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace (Perfetto) of the LAST "
+                         "churn leg's round spans")
     args = ap.parse_args()
 
-    rows = [bench_churn(n, args.rounds) for n in args.peers]
+    # the recorder is passive (no added compiles), but only profile the
+    # last leg so the timed legs carry zero span bookkeeping
+    trace_obs = None
+    if args.trace_out:
+        from repro.obs import FlightRecorder
+        trace_obs = FlightRecorder(trace=True)
+    rows = [bench_churn(n, args.rounds,
+                        obs=trace_obs if n == args.peers[-1] else None)
+            for n in args.peers]
+    if trace_obs is not None:
+        trace_obs.tracer.to_chrome_json(args.trace_out)
+        print(f"Chrome trace of churn-{args.peers[-1]} -> "
+              f"{args.trace_out} (open in https://ui.perfetto.dev)")
     common.emit("sim_bench_churn", rows,
                 ["peers", "compile_round_s", "steady_rounds_per_s",
                  "compiled_calls_per_round", "local_step_programs"])

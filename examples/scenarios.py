@@ -85,8 +85,11 @@ def main():
 
     out = args.out or (f"experiments/sim/{scenario.name}-"
                        f"seed{scenario.seed}.json")
-    telemetry.to_json(out)
-    summary = sim_telemetry_summary(telemetry.to_dict())
+    # include_perf attaches the per-validator stage-ms breakdown as a
+    # parallel "perf" section; the seeded part of the artifact (rounds/
+    # events/summary) stays byte-identical across same-seed runs
+    telemetry.to_json(out, include_perf=True)
+    summary = sim_telemetry_summary(telemetry.to_dict(include_perf=True))
     print(f"\n{scenario.rounds} rounds in {dt:.1f}s "
           f"({dt / scenario.rounds:.2f}s/round); telemetry -> {out}")
     print(f"final honest share of consensus incentive: "
@@ -100,6 +103,10 @@ def main():
               f"({', '.join(summary.get('audit_flag_reasons', []))}); "
               f"their final incentive share: "
               f"{summary['audit_flagged_final_share']:.3f}")
+    if summary.get("mean_stage_ms"):
+        stages = " ".join(f"{s}={ms:.0f}ms" for s, ms
+                          in summary["mean_stage_ms"].items())
+        print(f"mean stage wall-clock: {stages}")
     last = telemetry.rounds[-1]
     print("\nfinal consensus incentive (stake-weighted median):")
     for uid, w in sorted(last["consensus"].items(), key=lambda kv: -kv[1]):

@@ -337,9 +337,14 @@ class Validator:
                  rng: Optional[np.random.RandomState] = None,
                  baseline_cache: Optional[BaselineCache] = None,
                  grad_fn: Optional[Callable] = None,
-                 mesh=None):
+                 mesh=None, obs=None):
         from repro import sharding as shd   # pulls in model modules
         self.uid = uid
+        # optional FlightRecorder (repro.obs): round/stage/dispatch
+        # spans + per-round metric deltas. Strictly passive — None (the
+        # default) and an attached recorder run the identical round math
+        self.obs = obs
+        self._round_span = None
         self.params = params
         self.scheme = scheme
         self.eval_loss = eval_loss_fn          # (params, batch) -> scalar
@@ -444,6 +449,8 @@ class Validator:
         # the SAME compiled aggregate program every peer replica uses —
         # bit-identity by construction, one compile per shape fleet-wide
         self._agg = scheme.shared_aggregate_apply(params)
+        if obs is not None:
+            obs.attach_validator(self)
 
     # ------------------------------------------------------------ pieces
     @property
@@ -827,7 +834,8 @@ class Validator:
             k = len(samples)
             mat = padding.pad_rows(samples, samples[0].size,
                                    bucket=self._pad.get("sync", k))
-            scores = np.asarray(self._sync_scores(
+            scores = np.asarray(self._obs_dispatch(
+                "sync_scores", self._sync_scores,
                 jnp.asarray(sync_ref), jnp.asarray(mat),
                 jnp.float32(self.lr_at())))[:k]
             self.compiled_calls += 1
@@ -900,8 +908,9 @@ class Validator:
             ref = padding.pad_rows(
                 [row for _, arr in self._prev_sketches for row in arr],
                 ac.fingerprint_dim, bucket=AUDIT_REF_ROUNDS * rows)
-            sk, cur, prev = self._fingerprint(ctx.stacked_payloads,
-                                              jnp.asarray(ref))
+            sk, cur, prev = self._obs_dispatch(
+                "fingerprint", self._fingerprint, ctx.stacked_payloads,
+                jnp.asarray(ref))
             self.compiled_calls += 1
             sk = np.asarray(sk)[:k]
             cur = np.asarray(cur)[:k, :k]
@@ -980,15 +989,19 @@ class Validator:
             # O(k) sequential local steps (ROADMAP PR-3 follow-up).
             replay_margin: Dict[str, float] = {}
             if self._replayer is not None and targets:
-                reps_a = self._replayer.replay_batch(
+                reps_a = self._obs_dispatch(
+                    "replay_assigned", self._replayer.replay_batch,
                     self.params,
                     [self._assigned_batch(ctx, p) for p in targets])
-                reps_d = self._replayer.replay_batch(
+                reps_d = self._obs_dispatch(
+                    "replay_decoy", self._replayer.replay_batch,
                     self.params,
                     [self._unassigned_batch(ctx, p) for p in targets])
                 self.compiled_calls += 2
-                rsk_a = np.asarray(self._sketch(reps_a))
-                rsk_d = np.asarray(self._sketch(reps_d))
+                rsk_a = np.asarray(self._obs_dispatch(
+                    "sketch", self._sketch, reps_a))
+                rsk_d = np.asarray(self._obs_dispatch(
+                    "sketch", self._sketch, reps_d))
                 self.compiled_calls += 2
                 for i, p in enumerate(targets):
                     row = sk[ctx.stacked_index[p]]
@@ -1131,7 +1144,8 @@ class Validator:
             self._baseline_arg_spec = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
                                                jnp.asarray(x).dtype), args)
-            got_a, got_r = self._baselines(*args)
+            got_a, got_r = self._obs_dispatch("baselines",
+                                              self._baselines, *args)
             self.compiled_calls += 1
             self.baseline_calls += 1
             self.baseline_rows += len(missing)
@@ -1182,7 +1196,7 @@ class Validator:
         self._primary_arg_spec = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
                                            jnp.asarray(x).dtype), args)
-        s_a, s_r = self._primary(*args)
+        s_a, s_r = self._obs_dispatch("primary", self._primary, *args)
         self.compiled_calls += 1
         s_a, s_r = np.asarray(s_a)[:n], np.asarray(s_r)[:n]
         for i, p in enumerate(eval_set):
@@ -1273,8 +1287,8 @@ class Validator:
         bucket = self._agg_pad.get("agg", n)
         weights = np.zeros(bucket, np.float32)
         weights[:n] = 1.0 / n
-        self.params = self._agg(
-            self.params, stacked,
+        self.params = self._obs_dispatch(
+            "aggregate", self._agg, self.params, stacked,
             jnp.asarray(padding.pad_index(np.asarray(rows, np.int32),
                                           bucket)),
             jnp.float32(ctx.lr), jnp.asarray(weights))
@@ -1289,14 +1303,60 @@ class Validator:
                             active_peers=list(active_peers),
                             fast_set_size=fast_set_size)
 
-    def run_stages(self, ctx: RoundContext) -> RoundContext:
+    def begin_round_obs(self, ctx: RoundContext) -> None:
+        """Open the round: reset the stage clock and (with a recorder)
+        the round span. Callers composing stages manually — the sim
+        engine splits the pipeline at ``stage_aggregate`` — bracket
+        their stage calls with this and :meth:`end_round_obs`."""
         self.last_stage_ms = {}
-        for stage in self.stages:
-            t0 = time.perf_counter()
+        if self.obs is not None:
+            self._round_span = self.obs.tracer.begin(
+                f"round-{ctx.round_idx}", cat="round", tid=self.uid,
+                round=ctx.round_idx, peers=len(ctx.active_peers))
+
+    def end_round_obs(self, ctx: RoundContext) -> None:
+        """Close the round span and report the round's metric deltas."""
+        if self.obs is None:
+            return
+        self.obs.tracer.end(self._round_span)
+        self._round_span = None
+        self.obs.observe_validator_round(self, ctx)
+
+    def run_stage(self, stage: Callable[[RoundContext], RoundContext],
+                  ctx: RoundContext) -> RoundContext:
+        """Run one stage, timing it into ``last_stage_ms`` (and a stage
+        span when a recorder is attached) — the single timing path for
+        :meth:`run_stages` AND external stage composers."""
+        name = getattr(stage, "__name__", repr(stage)).replace("stage_",
+                                                               "")
+        tracer = self.obs.tracer if self.obs is not None else None
+        span = (tracer.begin(name, cat="stage", tid=self.uid)
+                if tracer is not None else None)
+        t0 = time.perf_counter()
+        try:
             ctx = stage(ctx)
-            name = getattr(stage, "__name__", repr(stage))
-            self.last_stage_ms[name.replace("stage_", "")] = (
-                time.perf_counter() - t0) * 1e3
+        finally:
+            self.last_stage_ms[name] = (time.perf_counter() - t0) * 1e3
+            if tracer is not None:
+                tracer.end(span)
+        return ctx
+
+    def _obs_dispatch(self, name: str, fn: Callable, *args):
+        """Wrap one jitted entry-point dispatch in a trace span (so a
+        retrace's backend-compile seconds land on the exact call that
+        caused it). Identical call, zero overhead when untraced."""
+        if self.obs is None or not self.obs.tracer.enabled:
+            return fn(*args)
+        with self.obs.tracer.span(name, cat="dispatch", tid=self.uid):
+            return fn(*args)
+
+    def run_stages(self, ctx: RoundContext) -> RoundContext:
+        self.begin_round_obs(ctx)
+        try:
+            for stage in self.stages:
+                ctx = self.run_stage(stage, ctx)
+        finally:
+            self.end_round_obs(ctx)
         return ctx
 
     def run_round(self, round_idx: int, active_peers: List[str],

@@ -360,9 +360,13 @@ def sim_telemetry_summary(telemetry) -> Dict:
     """
     tel = (load_sim_telemetry(telemetry) if isinstance(telemetry, str)
            else telemetry)
-    rounds = tel.get("rounds", [])
-    base = dict(tel.get("summary", {}))
-    shares = [r["honest_share"] for r in rounds]
+    rounds = tel.get("rounds") or []
+    base = dict(tel.get("summary") or {})
+    # rounds may predate a field (older exports, hand-built dicts):
+    # missing honest_share / val_loss / fast_pass_rate must degrade to
+    # "unknown", never KeyError (tests/test_analysis.py pins this)
+    shares = [r.get("honest_share") for r in rounds]
+    shares = [s for s in shares if s is not None]
     # audit verdicts (repro.audit): the flagged share of consensus
     # incentive in the final round — the "copies earn ~0" economics
     # claim in one number. The flagged set itself comes from the
@@ -387,4 +391,16 @@ def sim_telemetry_summary(telemetry) -> Dict:
         "audit_flagged_peers": flagged,
         "audit_flagged_final_share": flagged_share,
     })
+    # wall-clock digest from the optional perf side-channel (exports
+    # written with include_perf=True): mean per-stage milliseconds
+    # across rounds and validators — diagnostic only, not seeded
+    samples: Dict[str, list] = {}
+    for entry in tel.get("perf") or []:
+        for per_stage in (entry.get("stage_ms") or {}).values():
+            for stage, ms in per_stage.items():
+                samples.setdefault(stage, []).append(ms)
+    if samples:
+        base["mean_stage_ms"] = {
+            stage: sum(vals) / len(vals)
+            for stage, vals in sorted(samples.items())}
     return base

@@ -1,0 +1,247 @@
+"""obsd: run a testnet scenario behind the live telemetry daemon.
+
+The front half of ROADMAP direction 2: a long-lived process that drives
+a :class:`repro.sim.SimEngine` while a stdlib HTTP service
+(:class:`repro.obs.ObsService`) exposes what the incentive layer is
+deciding, live:
+
+    PYTHONPATH=src python -m repro.launch.obsd \
+        --scenario churn_storm --rounds 8 --port 9100 --hold
+
+    curl localhost:9100/metrics                 # Prometheus text
+    curl localhost:9100/v1/system/topology      # peers/validators/links
+    curl localhost:9100/v1/rounds               # recent round records
+    curl localhost:9100/v1/explain?uid=core-0   # per-peer verdicts
+    curl -N localhost:9100/v1/rounds/stream     # SSE round feed
+
+``--smoke`` is the CI acceptance mode: it runs the scenario twice —
+obs-disabled reference, then obs-enabled behind a live daemon — and
+asserts the observability layer is *passive* (byte-identical seeded
+telemetry, identical per-entry-point trace counts) while every endpoint
+(including the SSE stream) actually serves, then writes the Chrome
+trace artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+import urllib.request
+
+
+def _build_engine(args, obs=None):
+    from repro.configs.registry import tiny_config
+    from repro.sim import SimEngine, get_scenario
+
+    scenario = get_scenario(args.scenario, rounds=args.rounds or None,
+                            seed=args.seed)
+    cfg = tiny_config()
+    return SimEngine.from_scenario(scenario, cfg, batch=args.batch,
+                                   seq_len=args.seq_len, obs=obs)
+
+
+def _get(url: str, timeout: float = 30.0) -> bytes:
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.read()
+
+
+class _SSEReader(threading.Thread):
+    """Collects ``data:`` payloads from an SSE endpoint until closed."""
+
+    def __init__(self, url: str):
+        super().__init__(daemon=True, name="sse-reader")
+        self.url = url
+        self.records = []
+        self._stop = threading.Event()
+
+    def run(self):
+        try:
+            resp = urllib.request.urlopen(self.url, timeout=30)
+            while not self._stop.is_set():
+                line = resp.readline()
+                if not line:
+                    break
+                if line.startswith(b"data: "):
+                    self.records.append(json.loads(line[6:]))
+        except Exception:
+            pass
+
+    def stop(self):
+        self._stop.set()
+
+
+def _check_topology(topo: dict) -> None:
+    for key in ("scenario", "seed", "block", "round", "peers",
+                "validators", "default_link", "blocks_per_round"):
+        assert key in topo, f"topology missing {key!r}"
+    assert isinstance(topo["peers"], dict) and topo["peers"], \
+        "topology has no peers"
+    for uid, peer in topo["peers"].items():
+        for key in ("behavior", "registered", "link"):
+            assert key in peer, f"peer {uid} missing {key!r}"
+    for uid, val in topo["validators"].items():
+        for key in ("stake", "online", "checkpoint", "step"):
+            assert key in val, f"validator {uid} missing {key!r}"
+    json.dumps(topo)   # must be JSON-clean (no inf/nan leaked)
+
+
+REQUIRED_METRICS = (
+    "gauntlet_rounds_total", "gauntlet_compiled_calls_total",
+    "gauntlet_compiles_total", "gauntlet_stage_ms",
+    "gauntlet_fast_checks_total", "gauntlet_eval_set_size",
+    "sim_honest_share", "sim_active_peers", "sim_network_events_total",
+)
+
+
+def _check_metrics(text: str) -> None:
+    assert "# TYPE" in text and "# HELP" in text, \
+        "metrics exposition missing TYPE/HELP headers"
+    for name in REQUIRED_METRICS:
+        assert f"# TYPE {name}" in text, f"metrics missing {name}"
+    assert "gauntlet_stage_ms_bucket" in text, \
+        "stage-ms histogram has no buckets"
+
+
+def _smoke(args) -> int:
+    from repro.obs import FlightRecorder, ObsService
+
+    print(f"[obsd --smoke] reference run (obs disabled): "
+          f"{args.scenario} x{args.rounds} seed {args.seed}")
+    ref_engine = _build_engine(args)
+    ref_tel = ref_engine.run(args.rounds or None)
+    ref_json = ref_tel.to_json()
+    ref_traces = {uid: dict(v.trace_counts)
+                  for uid, v in ref_engine.validators.items()}
+
+    print("[obsd --smoke] observed run (daemon + tracer + SSE)")
+    recorder = FlightRecorder(trace=True)
+    engine = _build_engine(args, obs=recorder)
+    service = ObsService(recorder, port=args.port).start()
+    sse = _SSEReader(service.url("/v1/rounds/stream"))
+    sse.start()
+    try:
+        tel = engine.run(args.rounds or None)
+
+        # 1) the observed run must be bit-for-bit the reference run
+        obs_json = tel.to_json()
+        assert obs_json == ref_json, \
+            "telemetry export differs between obs-on and obs-off runs"
+        obs_traces = {uid: dict(v.trace_counts)
+                      for uid, v in engine.validators.items()}
+        assert obs_traces == ref_traces, (
+            f"observability added compiles: {obs_traces} != "
+            f"{ref_traces}")
+        print("[obsd --smoke] determinism: telemetry byte-identical, "
+              "trace counts flat")
+
+        # 2) endpoints serve schema-valid payloads
+        _check_metrics(_get(service.url("/metrics")).decode())
+        _check_topology(json.loads(
+            _get(service.url("/v1/system/topology"))))
+        rounds = json.loads(_get(service.url("/v1/rounds")))
+        assert len(rounds) == len(tel.rounds), \
+            f"/v1/rounds served {len(rounds)}/{len(tel.rounds)}"
+        explains = json.loads(_get(service.url("/v1/explain?round=0")))
+        assert explains and all("why" in r for r in explains), \
+            "explain records missing"
+        print(f"[obsd --smoke] endpoints: metrics/topology/rounds OK, "
+              f"{len(explains)} explain records for round 0")
+
+        # 3) the SSE stream delivered the round records live
+        deadline = time.time() + 10
+        while len(sse.records) < len(tel.rounds) \
+                and time.time() < deadline:
+            time.sleep(0.1)
+        assert sse.records, "SSE stream delivered no round records"
+        assert sse.records[0].get("round") == tel.rounds[0]["round"], \
+            "SSE record does not match the telemetry round"
+        print(f"[obsd --smoke] SSE stream: {len(sse.records)} round "
+              f"records")
+
+        # 4) artifacts
+        if args.out:
+            tel.to_json(args.out, include_perf=True)
+            print(f"[obsd --smoke] telemetry -> {args.out}")
+        if args.trace_out:
+            recorder.tracer.to_chrome_json(args.trace_out)
+            trace = json.loads(open(args.trace_out).read())
+            spans = [e for e in trace["traceEvents"]
+                     if e.get("ph") == "X"]
+            assert spans, "Chrome trace has no complete events"
+            print(f"[obsd --smoke] Chrome trace -> {args.trace_out} "
+                  f"({len(spans)} spans, "
+                  f"{trace['otherData']['xla_compile_s']:.1f}s "
+                  f"attributed compile)")
+    finally:
+        sse.stop()
+        service.stop()
+    print("[obsd --smoke] PASS")
+    return 0
+
+
+def _serve(args) -> int:
+    from repro.launch.analysis import sim_telemetry_summary
+    from repro.obs import FlightRecorder, ObsService
+
+    recorder = FlightRecorder(trace=not args.no_trace)
+    engine = _build_engine(args, obs=recorder)
+    service = ObsService(recorder, host=args.host, port=args.port)
+    service.start()
+    print(f"obsd serving on {service.url()}  "
+          f"(metrics /metrics, topology /v1/system/topology, "
+          f"SSE /v1/rounds/stream)")
+    try:
+        tel = engine.run(args.rounds or None)
+        summary = sim_telemetry_summary(tel.to_dict(include_perf=True))
+        print(f"run finished: {summary.get('rounds')} rounds, final "
+              f"honest share {summary.get('final_honest_share')}")
+        if args.out:
+            tel.to_json(args.out, include_perf=True)
+            print(f"telemetry -> {args.out}")
+        if args.trace_out:
+            recorder.tracer.to_chrome_json(args.trace_out)
+            print(f"Chrome trace -> {args.trace_out} (open in "
+                  f"https://ui.perfetto.dev)")
+        if args.hold:
+            print("holding the daemon open (Ctrl-C to exit) ...")
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        service.stop()
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="run a sim scenario behind the live telemetry "
+                    "daemon")
+    ap.add_argument("--scenario", default="churn_storm")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="0 = the scenario's default")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = ephemeral")
+    ap.add_argument("--out", default="",
+                    help="telemetry JSON path (written with perf)")
+    ap.add_argument("--trace-out", default="",
+                    help="Chrome trace JSON path (Perfetto)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable the span tracer (metrics/SSE only)")
+    ap.add_argument("--hold", action="store_true",
+                    help="keep serving after the run finishes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI acceptance: obs-off vs obs-on determinism "
+                         "+ endpoint schemas + SSE + trace artifact")
+    args = ap.parse_args(argv)
+    return _smoke(args) if args.smoke else _serve(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

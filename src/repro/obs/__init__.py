@@ -1,0 +1,41 @@
+"""Observability for the Gauntlet: flight recorder, tracer, metrics.
+
+The subsystem is strictly *passive* — it watches the validator round and
+the sim engine without adding compiled calls or perturbing the seeded
+determinism contract (``tests/test_obs.py`` pins both):
+
+``repro.obs.trace``
+    Span tracer: round → stage → dispatch spans with wall-clock ms,
+    ``jax.monitoring`` backend-compile events attributed to the
+    innermost open span, periodic ``device.memory_stats()`` samples,
+    Chrome-trace-event JSON export (open in Perfetto / about:tracing).
+
+``repro.obs.metrics``
+    Process-local counters / gauges / histograms with Prometheus text
+    exposition (format 0.0.4) — no client library dependency.
+
+``repro.obs.explain``
+    Per-(round, uid) verdict records tying fast-filter outcome, audit
+    verdict + reason, loss scores, OpenSkill ordinal and final weight
+    into one artifact, with a derived human-readable ``why``.
+
+``repro.obs.recorder``
+    :class:`FlightRecorder` — the hub the validator and engine report
+    into; owns the tracer, the metrics registry, the explain ring and
+    the SSE round feed.
+
+``repro.obs.server``
+    Stdlib-only HTTP daemon (:class:`ObsService`) serving
+    ``GET /metrics``, ``GET /v1/system/topology``, ``GET /v1/rounds``,
+    ``GET /v1/explain`` and an SSE stream at ``GET /v1/rounds/stream``.
+    ``python -m repro.launch.obsd`` runs a scenario behind it.
+"""
+from repro.obs.explain import explain_round
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.recorder import FlightRecorder
+from repro.obs.server import ObsService
+from repro.obs.trace import Span, SpanTracer
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "Span", "SpanTracer", "FlightRecorder", "ObsService",
+           "explain_round"]

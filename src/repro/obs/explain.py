@@ -1,0 +1,86 @@
+"""Per-peer verdict explains: one record per (round, uid) tying the
+whole incentive pipeline together.
+
+"Why did peer 17 earn 0 this round?" must be answerable from the
+artifact alone (the dashboards-as-trust-substrate stance of the related
+deployments). Each record captures, for one peer under one validator's
+round: the fast-filter outcome, the audit verdict + reason + strike
+state, the LossScores, the proof-of-computation μ and OpenSkill
+ordinal, the validator-local normalized score and weight, the
+stake-median consensus weight, and whether the peer's payload entered
+aggregation — plus a derived human-readable ``why`` summarizing the
+decisive rule.
+
+Records are plain JSON-safe dicts (the SSE stream and the explain
+endpoint serve them verbatim).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+
+def _why(rec: Dict[str, Any]) -> str:
+    """The decisive rule for this peer's weight, in pipeline order."""
+    w = rec["weight"]
+    if rec["audit_flag"]:
+        return (f"audit-flagged ({rec['audit_flag']}): round score "
+                f"zeroed, rating demoted, banned for "
+                f"{rec['audit_strikes']} round(s)")
+    if rec["audit_strikes"]:
+        return (f"serving audit ban ({rec['audit_strikes']} round(s) "
+                f"left): normalized score zeroed")
+    if rec["fast_checked"] and rec["fast_pass"] is False:
+        return ("failed fast filter (put window / format / sync "
+                "score): φ penalty applied to μ")
+    if w and w > 0:
+        tail = ("aggregated" if rec["aggregated"]
+                else "outside put window at aggregation")
+        return f"earned weight {w:.4f} (top-G, {tail})"
+    if rec["evaluated"]:
+        return ("evaluated but below the top-G cut: normalized score "
+                f"{rec['norm_score']:.4f}" if rec["norm_score"]
+                is not None else
+                "evaluated but below the top-G cut")
+    return ("not sampled for primary eval this round; weight derives "
+            "from the standing rating book")
+
+
+def explain_round(round_idx: int, validator, ctx,
+                  consensus: Optional[Dict[str, float]] = None,
+                  behaviors: Optional[Dict[str, str]] = None
+                  ) -> Dict[str, Dict[str, Any]]:
+    """Build the per-peer records for one validator's finished round.
+
+    ``validator`` is a :class:`repro.core.gauntlet.Validator` whose
+    stages have run on ``ctx``; ``consensus`` is the stake-median
+    fleet weight map when multiple validators ran (None single-
+    validator); ``behaviors`` is the sim's ground-truth behaviour map
+    (absent on live networks — the field is diagnostic only).
+    """
+    records: Dict[str, Dict[str, Any]] = {}
+    for uid in ctx.active_peers:
+        state = validator.peer_state.get(uid)
+        rec: Dict[str, Any] = {
+            "round": int(round_idx),
+            "uid": uid,
+            "validator": validator.uid,
+            "fast_checked": uid in ctx.fast_set,
+            "fast_pass": ctx.fast_pass.get(uid),
+            "evaluated": uid in ctx.eval_set,
+            "audit_flag": ctx.audit_flagged.get(uid),
+            "audit_strikes": int(validator.audit_strikes.get(uid, 0)),
+            "loss_score_assigned": ctx.loss_scores_assigned.get(uid),
+            "loss_score_rand": ctx.loss_scores_rand.get(uid),
+            "mu": float(state.mu) if state is not None else None,
+            "ordinal": float(validator.book.ordinal(uid)),
+            "norm_score": ctx.norm_scores.get(uid),
+            "weight": float(ctx.weights.get(uid, 0.0)),
+            "consensus_weight": (float(consensus.get(uid, 0.0))
+                                 if consensus is not None else None),
+            "aggregated": uid in ctx.contributors,
+        }
+        if behaviors is not None:
+            rec["behavior"] = behaviors.get(uid)
+        rec["why"] = _why(rec)
+        records[uid] = rec
+    return records

@@ -1,0 +1,215 @@
+"""Minimal metrics registry with Prometheus text exposition (0.0.4).
+
+Counters, gauges and histograms, labelled, process-local, stdlib-only —
+the repo cannot take a ``prometheus_client`` dependency, and the subset
+the Gauntlet needs (inc/set/observe + one ``render()``) is tiny. The
+registry is thread-safe: the sim engine writes from the driving thread
+while the :class:`repro.obs.server.ObsService` scrapes from HTTP
+handler threads.
+
+Naming follows Prometheus conventions: ``*_total`` counters,
+unit-suffixed gauges, ``_bucket``/``_sum``/``_count`` histogram series
+with cumulative ``le`` buckets.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+_LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, str]) -> _LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _escape(value: str) -> str:
+    return (value.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _fmt_labels(key: _LabelKey) -> str:
+    if not key:
+        return ""
+    inner = ",".join(f'{k}="{_escape(v)}"' for k, v in key)
+    return "{" + inner + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if v == float("inf"):
+        return "+Inf"
+    if isinstance(v, float) and v.is_integer():
+        return str(int(v))
+    return repr(v) if isinstance(v, float) else str(v)
+
+
+class _Metric:
+    kind = "untyped"
+
+    def __init__(self, name: str, help_text: str, lock: threading.Lock):
+        self.name = name
+        self.help_text = help_text
+        self._lock = lock
+
+    def render(self) -> List[str]:
+        raise NotImplementedError
+
+    def header(self) -> List[str]:
+        lines = []
+        if self.help_text:
+            lines.append(f"# HELP {self.name} {_escape(self.help_text)}")
+        lines.append(f"# TYPE {self.name} {self.kind}")
+        return lines
+
+
+class Counter(_Metric):
+    """Monotonic counter; ``inc`` with optional labels."""
+
+    kind = "counter"
+
+    def __init__(self, name, help_text, lock):
+        super().__init__(name, help_text, lock)
+        self._vals: Dict[_LabelKey, float] = {}
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name} cannot decrease")
+        key = _label_key(labels)
+        with self._lock:
+            self._vals[key] = self._vals.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        with self._lock:
+            return self._vals.get(_label_key(labels), 0.0)
+
+    def render(self) -> List[str]:
+        with self._lock:
+            items = sorted(self._vals.items())
+        return [f"{self.name}{_fmt_labels(k)} {_fmt_value(v)}"
+                for k, v in items] or [f"{self.name} 0"]
+
+
+class Gauge(_Metric):
+    """Point-in-time value; ``set``/``inc`` with optional labels."""
+
+    kind = "gauge"
+
+    def __init__(self, name, help_text, lock):
+        super().__init__(name, help_text, lock)
+        self._vals: Dict[_LabelKey, float] = {}
+
+    def set(self, value: float, **labels) -> None:
+        with self._lock:
+            self._vals[_label_key(labels)] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        key = _label_key(labels)
+        with self._lock:
+            self._vals[key] = self._vals.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        with self._lock:
+            return self._vals.get(_label_key(labels), 0.0)
+
+    def render(self) -> List[str]:
+        with self._lock:
+            items = sorted(self._vals.items())
+        return [f"{self.name}{_fmt_labels(k)} {_fmt_value(v)}"
+                for k, v in items] or [f"{self.name} 0"]
+
+
+# default buckets sized for stage latencies on a CPU validator: sub-ms
+# dispatch overhead up to multi-second compile-inclusive first rounds
+DEFAULT_BUCKETS = (1.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+                   1000.0, 2500.0, 5000.0, 10000.0)
+
+
+class Histogram(_Metric):
+    """Cumulative-bucket histogram (Prometheus ``le`` semantics)."""
+
+    kind = "histogram"
+
+    def __init__(self, name, help_text, lock,
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        super().__init__(name, help_text, lock)
+        self.buckets = tuple(sorted(buckets))
+        self._counts: Dict[_LabelKey, List[int]] = {}
+        self._sums: Dict[_LabelKey, float] = {}
+        self._totals: Dict[_LabelKey, int] = {}
+
+    def observe(self, value: float, **labels) -> None:
+        key = _label_key(labels)
+        with self._lock:
+            counts = self._counts.setdefault(key,
+                                             [0] * len(self.buckets))
+            for i, le in enumerate(self.buckets):
+                if value <= le:
+                    counts[i] += 1
+            self._sums[key] = self._sums.get(key, 0.0) + float(value)
+            self._totals[key] = self._totals.get(key, 0) + 1
+
+    def count(self, **labels) -> int:
+        with self._lock:
+            return self._totals.get(_label_key(labels), 0)
+
+    def render(self) -> List[str]:
+        lines: List[str] = []
+        with self._lock:
+            keys = sorted(self._counts)
+            for key in keys:
+                counts = self._counts[key]
+                for le, c in zip(self.buckets, counts):
+                    lk = _fmt_labels(key + (("le", _fmt_value(le)),))
+                    lines.append(f"{self.name}_bucket{lk} {c}")
+                lk = _fmt_labels(key + (("le", "+Inf"),))
+                lines.append(f"{self.name}_bucket{lk} "
+                             f"{self._totals[key]}")
+                lines.append(f"{self.name}_sum{_fmt_labels(key)} "
+                             f"{_fmt_value(self._sums[key])}")
+                lines.append(f"{self.name}_count{_fmt_labels(key)} "
+                             f"{self._totals[key]}")
+        return lines
+
+
+class MetricsRegistry:
+    """Named metrics with idempotent registration and one ``render``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _get(self, cls, name: str, help_text: str, **kw):
+        with self._lock:
+            existing = self._metrics.get(name)
+        if existing is not None:
+            if not isinstance(existing, cls):
+                raise ValueError(
+                    f"metric {name!r} already registered as "
+                    f"{existing.kind}, not {cls.kind}")
+            return existing
+        metric = cls(name, help_text, threading.Lock(), **kw)
+        with self._lock:
+            return self._metrics.setdefault(name, metric)
+
+    def counter(self, name: str, help_text: str = "") -> Counter:
+        return self._get(Counter, name, help_text)
+
+    def gauge(self, name: str, help_text: str = "") -> Gauge:
+        return self._get(Gauge, name, help_text)
+
+    def histogram(self, name: str, help_text: str = "",
+                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+        kw = {"buckets": tuple(buckets)} if buckets else {}
+        return self._get(Histogram, name, help_text, **kw)
+
+    def metrics(self) -> Iterable[_Metric]:
+        with self._lock:
+            return list(self._metrics.values())
+
+    def render(self) -> str:
+        """Prometheus text exposition format 0.0.4."""
+        lines: List[str] = []
+        for m in sorted(self.metrics(), key=lambda m: m.name):
+            lines.extend(m.header())
+            lines.extend(m.render())
+        return "\n".join(lines) + "\n"

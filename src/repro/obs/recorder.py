@@ -1,0 +1,207 @@
+"""FlightRecorder: the hub the validator round and sim engine report to.
+
+One recorder owns the :class:`repro.obs.trace.SpanTracer`, the
+:class:`repro.obs.metrics.MetricsRegistry`, a bounded ring of per-peer
+verdict explains and the round-record feed the SSE endpoint streams.
+Constructed once and handed to ``Validator(obs=...)`` /
+``SimEngine.from_scenario(obs=...)``; everything it does is passive —
+deltas of counters the validator already maintains, wall-clock spans,
+no compiled calls, no effect on the seeded round math.
+
+Metric names (the ``/metrics`` exposition):
+
+=============================== ======================================
+``gauntlet_rounds_total``        validator rounds observed
+``gauntlet_compiled_calls_total`` batched jit dispatches
+``gauntlet_compiles_total``      XLA traces per entry point
+``gauntlet_retraces_total``      traces beyond the first per entry
+``gauntlet_fast_checks_total``   fast-filter checks / passes
+``gauntlet_fast_passes_total``
+``gauntlet_fast_pass_rate``      last round's pass rate (gauge)
+``gauntlet_audit_flags_total``   audit verdicts by reason
+``gauntlet_stage_ms``            per-stage wall-clock histogram
+``gauntlet_eval_set_size``       last round's |S_t| (gauge)
+``obs_xla_compile_seconds_total`` span-attributed backend compiles
+``sim_honest_share``             honest share of consensus (gauge)
+``sim_active_peers``             live peers (gauge)
+``sim_val_loss``                 checkpoint validation loss (gauge)
+``sim_network_events_total``     bucket-store transit counters
+``sim_payload_bytes_total``      submitted payload bytes
+=============================== ======================================
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SpanTracer
+
+
+class FlightRecorder:
+    """Aggregates traces, metrics, explains and the round feed."""
+
+    def __init__(self, trace: bool = True,
+                 tracer: Optional[SpanTracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 explain_rounds: int = 128,
+                 feed_rounds: int = 512,
+                 sample_memory_every: int = 1):
+        self.tracer = tracer or SpanTracer(
+            enabled=trace, sample_memory_every=sample_memory_every)
+        self.metrics = metrics or MetricsRegistry()
+        # the daemon's topology endpoint; the engine installs its own
+        self.topology_fn: Optional[Callable[[], Dict[str, Any]]] = None
+        self.explains: collections.deque = collections.deque(
+            maxlen=explain_rounds)      # {"round": r, "records": {...}}
+        self._feed: collections.deque = collections.deque(
+            maxlen=feed_rounds)         # (seq, record)
+        self._feed_cv = threading.Condition()
+        self._seq = 0
+        self._v_snap: Dict[str, Dict[str, Any]] = {}
+        self._compile_s_snap = 0.0
+
+        m = self.metrics
+        self.m_rounds = m.counter(
+            "gauntlet_rounds_total", "Validator rounds observed")
+        self.m_compiled_calls = m.counter(
+            "gauntlet_compiled_calls_total",
+            "Batched jit entry-point dispatches")
+        self.m_compiles = m.counter(
+            "gauntlet_compiles_total",
+            "XLA traces per jitted entry point")
+        self.m_retraces = m.counter(
+            "gauntlet_retraces_total",
+            "Traces beyond the first per entry point (should stay 0)")
+        self.m_fast_checks = m.counter(
+            "gauntlet_fast_checks_total", "Fast-filter checks")
+        self.m_fast_passes = m.counter(
+            "gauntlet_fast_passes_total", "Fast-filter passes")
+        self.m_fast_rate = m.gauge(
+            "gauntlet_fast_pass_rate",
+            "Fast-filter pass rate of the last observed round")
+        self.m_audit_flags = m.counter(
+            "gauntlet_audit_flags_total", "Audit verdicts by reason")
+        self.m_stage_ms = m.histogram(
+            "gauntlet_stage_ms", "Per-stage wall-clock milliseconds")
+        self.m_eval_set = m.gauge(
+            "gauntlet_eval_set_size", "|S_t| of the last observed round")
+        self.m_compile_s = m.counter(
+            "obs_xla_compile_seconds_total",
+            "Backend-compile seconds attributed to open spans")
+        self.m_honest_share = m.gauge(
+            "sim_honest_share", "Honest share of consensus incentive")
+        self.m_active_peers = m.gauge(
+            "sim_active_peers", "Live peers in the simulated network")
+        self.m_val_loss = m.gauge(
+            "sim_val_loss", "Checkpoint validation loss (last eval)")
+        self.m_net_events = m.counter(
+            "sim_network_events_total",
+            "Bucket-store transit events by kind")
+        self.m_net_bytes = m.counter(
+            "sim_payload_bytes_total",
+            "Payload bytes through the simulated network")
+
+    # --------------------------------------------------------- validator
+    def attach_validator(self, validator) -> None:
+        """Snapshot the validator's counters so the first observed round
+        reports deltas from here, not absolute totals."""
+        self._v_snap[validator.uid] = {
+            "calls": validator.compiled_calls,
+            "traces": dict(validator.trace_counts),
+        }
+
+    def observe_validator_round(self, validator, ctx) -> None:
+        """Per-round metric deltas from one validator's counters."""
+        uid = validator.uid
+        snap = self._v_snap.get(uid) or {"calls": 0, "traces": {}}
+        calls_delta = validator.compiled_calls - snap["calls"]
+        if calls_delta > 0:
+            self.m_compiled_calls.inc(calls_delta, validator=uid)
+        traces = dict(validator.trace_counts)
+        for entry, n in traces.items():
+            prev = snap["traces"].get(entry, 0)
+            delta = n - prev
+            if delta <= 0:
+                continue
+            self.m_compiles.inc(delta, entry=entry, validator=uid)
+            retraces = delta if prev > 0 else delta - 1
+            if retraces > 0:
+                self.m_retraces.inc(retraces, entry=entry, validator=uid)
+        self._v_snap[uid] = {"calls": validator.compiled_calls,
+                             "traces": traces}
+        self.m_rounds.inc(validator=uid)
+        if ctx.fast_pass:
+            passes = sum(ctx.fast_pass.values())
+            self.m_fast_checks.inc(len(ctx.fast_pass), validator=uid)
+            self.m_fast_passes.inc(passes, validator=uid)
+            self.m_fast_rate.set(passes / len(ctx.fast_pass),
+                                 validator=uid)
+        for flagged_uid, reason in ctx.audit_flagged.items():
+            self.m_audit_flags.inc(reason=reason, validator=uid)
+        for stage, ms in validator.last_stage_ms.items():
+            self.m_stage_ms.observe(ms, stage=stage, validator=uid)
+        self.m_eval_set.set(len(ctx.eval_set), validator=uid)
+        compile_delta = self.tracer.xla_compile_s - self._compile_s_snap
+        if compile_delta > 0:
+            self.m_compile_s.inc(compile_delta)
+            self._compile_s_snap = self.tracer.xla_compile_s
+
+    # ------------------------------------------------------------ engine
+    def publish_round(self, record: Dict[str, Any],
+                      explains: Optional[List[Dict]] = None) -> None:
+        """Engine-level round record → gauges/counters + the SSE feed."""
+        honest = record.get("honest_share")
+        if honest is not None:
+            self.m_honest_share.set(honest)
+        self.m_active_peers.set(len(record.get("active_peers") or ()))
+        val_loss = record.get("val_loss")
+        if val_loss is not None:
+            self.m_val_loss.set(val_loss)
+        for kind, n in (record.get("network") or {}).items():
+            if not n:
+                continue
+            if kind.startswith("bytes_"):
+                self.m_net_bytes.inc(n, direction=kind[len("bytes_"):])
+            else:
+                self.m_net_events.inc(n, kind=kind)
+        if explains:
+            # explains: flat list of repro.obs.explain records (possibly
+            # several validators' views of the same round)
+            self.explains.append({"round": record.get("round"),
+                                  "records": list(explains)})
+        with self._feed_cv:
+            self._seq += 1
+            self._feed.append((self._seq, record))
+            self._feed_cv.notify_all()
+
+    # -------------------------------------------------------------- feed
+    def wait_rounds(self, after_seq: int, timeout: float = 0.5
+                    ) -> Tuple[int, List[Dict[str, Any]]]:
+        """Round records with seq > ``after_seq``; blocks up to
+        ``timeout`` seconds for fresh ones. Returns (latest_seq, recs)."""
+        with self._feed_cv:
+            if self._seq <= after_seq:
+                self._feed_cv.wait(timeout)
+            fresh = [rec for seq, rec in self._feed if seq > after_seq]
+            return self._seq, fresh
+
+    def recent_rounds(self, limit: int = 64) -> List[Dict[str, Any]]:
+        with self._feed_cv:
+            records = [rec for _, rec in self._feed]
+        return records[-limit:]
+
+    # ----------------------------------------------------------- explain
+    def explain(self, uid: Optional[str] = None,
+                round_idx: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Flat list of verdict records, optionally filtered."""
+        out: List[Dict[str, Any]] = []
+        for entry in list(self.explains):
+            if round_idx is not None and entry["round"] != round_idx:
+                continue
+            for rec in entry["records"]:
+                if uid is not None and rec.get("uid") != uid:
+                    continue
+                out.append(rec)
+        return out

@@ -1,0 +1,144 @@
+"""Stdlib-only telemetry daemon over a :class:`FlightRecorder`.
+
+Endpoints (all GET):
+
+``/metrics``
+    Prometheus text exposition 0.0.4 of the recorder's registry.
+``/v1/system/topology``
+    Peers, validators, link specs and behaviours of the running
+    engine (the recorder's ``topology_fn``; 404 when none installed).
+``/v1/rounds``
+    Recent round records (``?limit=N``), newest last.
+``/v1/rounds/stream``
+    Server-sent events: each published round record as one ``data:``
+    line; heartbeat comments while idle. ``?replay=0`` skips the
+    backlog and streams only rounds published after connect.
+``/v1/explain``
+    Per-peer verdict records (``?uid=peer-3&round=7`` filters).
+``/healthz``
+    Liveness probe.
+
+Everything is ``http.server`` + ``json`` — the container cannot grow
+dependencies, and the payloads are small enough that a threading
+HTTP/1.0 server (connection-per-request, close-delimited SSE) is the
+right amount of machinery.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Optional
+from urllib.parse import parse_qs, urlsplit
+
+from repro.obs.recorder import FlightRecorder
+
+
+def _make_handler(hub: FlightRecorder):
+    class Handler(BaseHTTPRequestHandler):
+        # close-delimited responses; keeps SSE framing trivial
+        protocol_version = "HTTP/1.0"
+
+        def log_message(self, fmt, *args):   # silence request spam
+            pass
+
+        # ------------------------------------------------------ helpers
+        def _send(self, body: bytes, content_type: str,
+                  status: int = 200) -> None:
+            self.send_response(status)
+            self.send_header("Content-Type", content_type)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _json(self, obj: Any, status: int = 200) -> None:
+            self._send(json.dumps(obj, sort_keys=True).encode(),
+                       "application/json", status)
+
+        # ------------------------------------------------------- routes
+        def do_GET(self):
+            url = urlsplit(self.path)
+            qs = parse_qs(url.query)
+            try:
+                if url.path == "/metrics":
+                    self._send(hub.metrics.render().encode(),
+                               "text/plain; version=0.0.4; "
+                               "charset=utf-8")
+                elif url.path == "/v1/system/topology":
+                    if hub.topology_fn is None:
+                        self._json({"error": "no topology source"}, 404)
+                    else:
+                        self._json(hub.topology_fn())
+                elif url.path == "/v1/rounds":
+                    limit = int(qs.get("limit", ["64"])[0])
+                    self._json(hub.recent_rounds(limit))
+                elif url.path == "/v1/explain":
+                    uid = qs.get("uid", [None])[0]
+                    rnd = qs.get("round", [None])[0]
+                    self._json(hub.explain(
+                        uid=uid,
+                        round_idx=int(rnd) if rnd is not None else None))
+                elif url.path == "/v1/rounds/stream":
+                    self._stream(replay=qs.get("replay",
+                                               ["1"])[0] != "0")
+                elif url.path == "/healthz":
+                    self._send(b"ok\n", "text/plain")
+                else:
+                    self._json({"error": "not found",
+                                "path": url.path}, 404)
+            except (BrokenPipeError, ConnectionResetError):
+                pass
+
+        def _stream(self, replay: bool = True) -> None:
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.end_headers()
+            seq = 0
+            if not replay:
+                seq, _ = hub.wait_rounds(1 << 62, timeout=0.0)
+            while not getattr(self.server, "stopping", False):
+                seq, fresh = hub.wait_rounds(seq, timeout=0.5)
+                if fresh:
+                    for rec in fresh:
+                        payload = json.dumps(rec, sort_keys=True)
+                        self.wfile.write(
+                            f"event: round\ndata: {payload}\n\n"
+                            .encode())
+                else:
+                    self.wfile.write(b": heartbeat\n\n")
+                self.wfile.flush()
+
+    return Handler
+
+
+class ObsService:
+    """Owns the HTTP server thread; ``port=0`` picks an ephemeral port."""
+
+    def __init__(self, recorder: FlightRecorder,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.recorder = recorder
+        self.server = ThreadingHTTPServer((host, port),
+                                          _make_handler(recorder))
+        self.server.daemon_threads = True
+        self.server.stopping = False
+        self.host, self.port = self.server.server_address[:2]
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "ObsService":
+        self._thread = threading.Thread(
+            target=self.server.serve_forever,
+            kwargs={"poll_interval": 0.1}, daemon=True,
+            name="obs-service")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.server.stopping = True
+        self.server.shutdown()
+        self.server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+
+    def url(self, path: str = "/") -> str:
+        return f"http://{self.host}:{self.port}{path}"

@@ -29,9 +29,11 @@ over this engine (single validator, perfect network, no churn).
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
+import math
 import zlib
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -40,6 +42,7 @@ from repro.audit import assignment as audit_assignment
 from repro.comms.chain import Chain
 from repro.core import scores as S
 from repro.core.gauntlet import BaselineCache, RoundReport, Validator
+from repro.obs.explain import explain_round
 from repro.sim.network import NetworkModel, SimBucketStore
 from repro.sim.scenario import PeerSpec, Scenario
 from repro.sim.telemetry import HONEST_BEHAVIORS, Telemetry
@@ -60,10 +63,18 @@ class SimEngine:
                  grad_fn: Optional[Callable] = None,
                  fast_set_size: Optional[int] = None,
                  eval_every: int = 5,
-                 eval_batch_fn: Optional[Callable] = None):
+                 eval_batch_fn: Optional[Callable] = None,
+                 obs=None):
         assert validators, "need at least one validator"
         self.chain = chain
         self.store = store
+        # optional FlightRecorder (repro.obs): round records stream to
+        # its SSE feed, metrics update per round, and the topology
+        # endpoint reads this engine. Passive — the seeded round math
+        # and the deterministic telemetry export are unchanged.
+        self.obs = obs
+        if obs is not None:
+            obs.topology_fn = self.topology
         self.validators: Dict[str, Validator] = {v.uid: v
                                                  for v in validators}
         self.peers: Dict[str, PeerNode] = dict(peers)
@@ -240,8 +251,9 @@ class SimEngine:
             ctx = v.build_context(
                 rnd, [u for u in active if u in self.chain.peers],
                 fast_set_size=self.fast_set_size)
+            v.begin_round_obs(ctx)
             for stage in stages[:cut]:         # ... incl. the chain post
-                ctx = stage(ctx)
+                ctx = v.run_stage(stage, ctx)
             ctxs[v.uid], cuts[v.uid] = ctx, (stages, cut)
         # --- incentive resolves across validators by stake-weighted median
         consensus = self.chain.consensus_weights()
@@ -262,7 +274,8 @@ class SimEngine:
                 ctx.weights = dict(agg_weights)
             stages, cut = cuts[v.uid]
             for stage in stages[cut:]:
-                ctx = stage(ctx)
+                ctx = v.run_stage(stage, ctx)
+            v.end_round_obs(ctx)
             ctxs[v.uid] = ctx
             lr = ctx.lr
             self.reports[v.uid].append(ctx.report())
@@ -297,7 +310,7 @@ class SimEngine:
             net_delta = {k: after[k] - net_before[k] for k in after}
         cp_uid = self.chain.checkpoint_pointer
         cp = self.validators.get(cp_uid)
-        self.telemetry.record_round(
+        record = self.telemetry.record_round(
             round=rnd, block=self.chain.block,
             active_peers=sorted(self.peers),
             honest_share=(honest_w / total_w if total_w > 0 else 0.0),
@@ -317,7 +330,61 @@ class SimEngine:
             offline_validators=sorted(self.offline_validators),
             network=net_delta,
             audit={v.uid: dict(sorted(ctxs[v.uid].audit_flagged.items()))
-                   for v in order})
+                   for v in order},
+            # wall-clock per-stage breakdown: routed by Telemetry to its
+            # ``perf`` side-channel, never into the deterministic record
+            stage_ms={v.uid: {s: round(ms, 3) for s, ms
+                              in v.last_stage_ms.items()}
+                      for v in order})
+        if self.obs is not None:
+            explains: List[Dict[str, Any]] = []
+            for v in order:
+                explains.extend(explain_round(
+                    rnd, v, ctxs[v.uid], consensus=consensus,
+                    behaviors=behav).values())
+            self.obs.publish_round(record, explains)
+
+    # --------------------------------------------------------- topology
+    def topology(self) -> Dict[str, Any]:
+        """Live network topology for the daemon's
+        ``/v1/system/topology`` endpoint: peers (behaviour + link),
+        validators (stake, liveness, checkpoint role) and the chain
+        clock. JSON-safe — infinite link bandwidths become None."""
+        net = getattr(self.store, "network", None)
+
+        def link(profile) -> Dict[str, Any]:
+            return {k: (None if isinstance(v, float) and math.isinf(v)
+                        else v)
+                    for k, v in dataclasses.asdict(profile).items()}
+
+        peers = {}
+        for uid, node in sorted(self.peers.items()):
+            peers[uid] = {
+                "behavior": node.pc.behavior,
+                "registered": uid in self.chain.peers,
+                "link": link(net.profile(uid)) if net else None,
+            }
+        validators = {}
+        for uid, v in sorted(self.validators.items()):
+            validators[uid] = {
+                "stake": self.chain.validators[uid].stake,
+                "online": uid not in self.offline_validators,
+                "checkpoint": uid == self.chain.checkpoint_pointer,
+                "step": v.step,
+                "peers_rated": len(v.peer_state),
+            }
+        return {
+            "scenario": self.telemetry.scenario,
+            "seed": self.telemetry.seed,
+            "scheme": next(iter(self.validators.values())).scheme.name,
+            "block": self.chain.block,
+            "round": self.chain.round_of(),
+            "blocks_per_round": self.chain.blocks_per_round,
+            "default_link": link(net.default) if net else None,
+            "peers": peers,
+            "validators": validators,
+            "pending_joins": sorted(self._pending_joins),
+        }
 
     def run(self, num_rounds: Optional[int] = None) -> Telemetry:
         start = self.chain.round_of()
@@ -334,7 +401,8 @@ class SimEngine:
                       eval_every: Optional[int] = None,
                       blocks_per_round: int = 10,
                       eval_chunk: int = 0,
-                      mesh_devices: int = 0) -> "SimEngine":
+                      mesh_devices: int = 0,
+                      obs=None) -> "SimEngine":
         """Wire a complete testnet from a declarative scenario.
 
         ``eval_chunk`` (ignored when ``hp`` is supplied) bounds each
@@ -350,7 +418,12 @@ class SimEngine:
         scores ~N× peers per wall-clock round. Results are bit-identical
         to ``mesh_devices=0`` on one device. Set ``REPRO_COMPILE_CACHE``
         to a directory to also persist compiled round programs across
-        runs (warm start on run 2)."""
+        runs (warm start on run 2).
+
+        ``obs`` (a :class:`repro.obs.FlightRecorder`) attaches the
+        flight recorder to every validator and the engine: round/stage
+        spans, metrics, verdict explains and the SSE round feed —
+        without perturbing trace counts or the seeded telemetry."""
         from repro.configs.base import TrainConfig
         from repro.configs.registry import tiny_config
         from repro.data import pipeline
@@ -393,7 +466,8 @@ class SimEngine:
                       rng=np.random.RandomState(
                           (scenario.seed * 7919
                            + zlib.crc32(vs.uid.encode())) % (2 ** 31)),
-                      baseline_cache=cache, grad_fn=grad_fn, mesh=mesh)
+                      baseline_cache=cache, grad_fn=grad_fn, mesh=mesh,
+                      obs=obs)
             for vs in scenario.validators]
         telemetry = Telemetry(scenario.name, scenario.seed, meta={
             "model": cfg.name, "params": cfg.param_count(),
@@ -401,7 +475,7 @@ class SimEngine:
             "blocks_per_round": blocks_per_round, "scheme": scheme.name,
             "description": scenario.description})
         engine = cls(chain, store, validators, {}, telemetry=telemetry,
-                     grad_fn=grad_fn,
+                     grad_fn=grad_fn, obs=obs,
                      eval_every=eval_every
                      or max(scenario.rounds // 6, 1),
                      eval_batch_fn=lambda rnd: pipeline.unassigned_data(

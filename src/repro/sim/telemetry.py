@@ -8,7 +8,19 @@ counters, and every discrete event (join/leave/turncoat/failover).
 
 Export is ``json.dumps(..., sort_keys=True)`` over plain Python floats
 produced by a seeded simulation, so the same seed yields a byte-identical
-file — the determinism contract ``tests/test_sim.py`` pins down.
+file — the determinism contract ``tests/test_sim.py`` pins down. Two
+hardening rules keep that contract honest:
+
+* np / jnp scalars are coerced to native Python at ``record_round``
+  time (not at ``to_json``), so a field that sneaks in as ``jnp.float32``
+  still round-trips byte-identically instead of crashing the dump;
+* wall-clock fields (``PERF_FIELDS``, currently the per-validator
+  ``stage_ms`` breakdown) are split into a parallel ``perf`` series that
+  the DEFAULT export omits — stage latencies are real telemetry but they
+  are not deterministic, so they ride next to the seeded record, never
+  inside it. ``to_dict(include_perf=True)`` / ``to_json(...,
+  include_perf=True)`` attach them (the scenario-artifact export does).
+
 ``repro.launch.analysis.sim_telemetry_summary`` consumes the export.
 """
 from __future__ import annotations
@@ -21,6 +33,30 @@ from typing import Any, Dict, List, Optional
 # share of consensus weight (the paper's headline survival metric)
 HONEST_BEHAVIORS = frozenset({"honest", "more_data", "desync"})
 
+# round-record fields that carry wall-clock measurements: routed to the
+# ``perf`` series, excluded from the deterministic export by default
+PERF_FIELDS = ("stage_ms",)
+
+
+def coerce_native(value: Any) -> Any:
+    """Recursively convert np/jnp scalars and arrays to native Python.
+
+    Anything with a 0-d ``.item()`` becomes the matching Python scalar;
+    higher-rank arrays become (nested) lists. Dicts/lists/tuples recurse;
+    native scalars pass through untouched.
+    """
+    if isinstance(value, dict):
+        return {k: coerce_native(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [coerce_native(v) for v in value]
+    if isinstance(value, (str, bytes)) or value is None:
+        return value
+    if hasattr(value, "item"):
+        if getattr(value, "ndim", 0) == 0:
+            return value.item()
+        return coerce_native(value.tolist())
+    return value
+
 
 class Telemetry:
     """Append-only round records + event log for one scenario run."""
@@ -32,13 +68,27 @@ class Telemetry:
         self.meta = dict(meta or {})
         self.rounds: List[Dict[str, Any]] = []
         self.events: List[Dict[str, Any]] = []
+        self.perf: List[Dict[str, Any]] = []   # wall-clock side-channel
 
     # ------------------------------------------------------------ record
     def log_event(self, block: int, kind: str, detail: str) -> None:
         self.events.append({"block": block, "kind": kind, "detail": detail})
 
-    def record_round(self, **fields) -> None:
+    def record_round(self, **fields) -> Dict[str, Any]:
+        """Append one round record (returned after coercion).
+
+        np/jnp scalars are made native here — the export must not depend
+        on who computed a field — and ``PERF_FIELDS`` are diverted to
+        the ``perf`` series so wall-clock noise never enters the
+        deterministic record.
+        """
+        fields = coerce_native(fields)
+        perf = {k: fields.pop(k) for k in PERF_FIELDS if k in fields}
+        if perf:
+            perf["round"] = fields.get("round", len(self.rounds))
+            self.perf.append(perf)
         self.rounds.append(fields)
+        return fields
 
     # ----------------------------------------------------------- export
     def summary(self) -> Dict[str, Any]:
@@ -48,18 +98,19 @@ class Telemetry:
         losses = [r["val_loss"] for r in self.rounds
                   if r.get("val_loss") is not None]
         pass_rates = [rate for r in self.rounds
-                      for rate in r.get("fast_pass_rate", {}).values()]
+                      for rate in (r.get("fast_pass_rate") or {}).values()]
         # audit verdicts: {round -> {validator -> {uid -> reason}}}
         flags = [(uid, reason)
                  for r in self.rounds
                  for per_val in (r.get("audit") or {}).values()
                  for uid, reason in per_val.items()]
+        shares = [r.get("honest_share") for r in self.rounds]
+        shares = [s for s in shares if s is not None]
         return {
             "rounds": len(self.rounds),
             "final_honest_share": last.get("honest_share"),
             "mean_honest_share": (
-                sum(r.get("honest_share", 0.0) for r in self.rounds)
-                / len(self.rounds)),
+                sum(shares) / len(shares) if shares else None),
             "mean_fast_pass_rate": (
                 sum(pass_rates) / len(pass_rates) if pass_rates else None),
             "val_losses": losses,
@@ -70,13 +121,18 @@ class Telemetry:
             "audit_flag_reasons": sorted({reason for _, reason in flags}),
         }
 
-    def to_dict(self) -> Dict[str, Any]:
-        return {"scenario": self.scenario, "seed": self.seed,
-                "meta": self.meta, "rounds": self.rounds,
-                "events": self.events, "summary": self.summary()}
+    def to_dict(self, include_perf: bool = False) -> Dict[str, Any]:
+        out = {"scenario": self.scenario, "seed": self.seed,
+               "meta": self.meta, "rounds": self.rounds,
+               "events": self.events, "summary": self.summary()}
+        if include_perf:
+            out["perf"] = self.perf
+        return out
 
-    def to_json(self, path: Optional[str] = None) -> str:
-        text = json.dumps(self.to_dict(), sort_keys=True, indent=2)
+    def to_json(self, path: Optional[str] = None,
+                include_perf: bool = False) -> str:
+        text = json.dumps(self.to_dict(include_perf=include_perf),
+                          sort_keys=True, indent=2)
         if path:
             d = os.path.dirname(path)
             if d:
