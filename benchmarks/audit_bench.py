@@ -6,6 +6,10 @@ proves the audit subsystem's acceptance economics:
 
   * every ring member is flagged by ``Validator.stage_uniqueness`` and
     earns < 5% of an honest peer's consensus incentive;
+  * the same holds in settled tokens (``repro.econ``): once flagged,
+    a ring member's final-round ledger payout is < 5% of an honest
+    peer's, and mean honest *profit* (credits minus burns minus
+    operating cost) strictly dominates every ring member's;
   * zero false positives — no honest peer is ever flagged, in any round;
   * honest payouts are not harmed by the audit: the honest fleet's share
     of consensus incentive with the audit on is >= its share with the
@@ -35,6 +39,7 @@ sys.path.insert(0, "benchmarks")
 import common  # noqa: E402
 
 from repro.configs.registry import tiny_config            # noqa: E402
+from repro.econ import profits                            # noqa: E402
 from repro.launch.analysis import sim_telemetry_summary   # noqa: E402
 from repro.sim import SimEngine, get_scenario             # noqa: E402
 
@@ -68,9 +73,17 @@ def run_ring(seed: int, rounds: int, audit: bool, scheme: str = "demo"):
     honest_margins = [m for rep in engine.reports[v.uid]
                       for uid, m in rep.audit_detail.get(
                           "replay_margins", {}).items() if uid in HONEST]
+    # the same economics in settled tokens: final-round ledger credits
+    # per uid, and cumulative profit (credits - burns - operating cost)
+    last_credits = {}
+    for e in engine.chain.payouts(rounds - 1):
+        if e.kind == "credit":
+            last_credits[e.uid] = last_credits.get(e.uid, 0.0) + e.amount
+    profit = profits(engine.chain.balances(), engine.roi)
     return {
         "engine": engine, "validator": v, "telemetry": tel,
         "consensus": consensus, "flagged": flagged,
+        "last_credits": last_credits, "profit": profit,
         "min_honest_margin": min(honest_margins, default=float("nan")),
         "compile_round_s": t_compile,
         "steady_round_s": steady / max(rounds - 1, 1),
@@ -99,6 +112,13 @@ def main():
                                     for p in HONEST]))
         copy_max = max(on["consensus"].get(p, 0.0) for p in RING)
         false_pos = sorted(on["flagged"] & set(HONEST))
+        # settled-token forms of the same economics
+        honest_tok = float(np.mean([on["last_credits"].get(p, 0.0)
+                                    for p in HONEST]))
+        copy_max_tok = max(on["last_credits"].get(p, 0.0) for p in RING)
+        honest_profit = float(np.mean([on["profit"].get(p, 0.0)
+                                       for p in HONEST]))
+        copy_profit_max = max(on["profit"].get(p, 0.0) for p in RING)
         # ---- acceptance assertions -------------------------------------
         assert set(RING) <= on["flagged"], (seed, on["flagged"])
         assert not false_pos, (seed, false_pos)
@@ -106,6 +126,13 @@ def main():
         assert copy_max < 0.05 * honest_on, (seed, copy_max, honest_on)
         assert honest_on >= honest_off - 1e-9, (seed, honest_on,
                                                 honest_off)
+        # once flagged, the ring's final-round ledger payout collapses,
+        # and honest profit strictly dominates every ring member's
+        assert honest_tok > 0, (seed, on["last_credits"])
+        assert copy_max_tok < 0.05 * honest_tok, (seed, copy_max_tok,
+                                                  honest_tok)
+        assert honest_profit > copy_profit_max, (seed, honest_profit,
+                                                 copy_profit_max)
         summ = sim_telemetry_summary(on["telemetry"].to_dict())
         verdicts[f"seed{seed}"] = summ
         on["telemetry"].to_json(os.path.join(
@@ -116,6 +143,10 @@ def main():
             "honest_mean_w_no_audit": honest_off,
             "copy_max_w": copy_max,
             "copy_vs_honest": copy_max / honest_on,
+            "honest_mean_tok": honest_tok,
+            "copy_max_tok": copy_max_tok,
+            "honest_profit": honest_profit,
+            "copy_profit_max": copy_profit_max,
             "flagged": len(on["flagged"]),
             "false_positives": len(false_pos),
             "min_honest_margin": on["min_honest_margin"],
@@ -125,8 +156,9 @@ def main():
 
     common.emit("audit_bench", rows,
                 ["seed", "honest_mean_w", "honest_mean_w_no_audit",
-                 "copy_max_w", "copy_vs_honest", "flagged",
-                 "false_positives", "min_honest_margin",
+                 "copy_max_w", "copy_vs_honest", "honest_mean_tok",
+                 "copy_max_tok", "honest_profit", "copy_profit_max",
+                 "flagged", "false_positives", "min_honest_margin",
                  "calls_per_round", "steady_round_s"])
     # O(1) dispatch claim: flat compiled calls per round across seeds
     assert len({round(r["calls_per_round"], 6) for r in rows}) <= 2, rows
@@ -136,8 +168,11 @@ def main():
         json.dump(verdicts, f, indent=2, sort_keys=True)
     print(f"\ncopycat economics over seeds {args.seeds}: copies earn "
           f"<= {max(r['copy_vs_honest'] for r in rows):.3%} of an honest "
-          f"peer's incentive; 0 false positives; verdicts -> "
-          f"{args.out_dir}/audit_verdicts.json")
+          f"peer's incentive; in settled tokens honest profit "
+          f"{min(r['honest_profit'] for r in rows):+.2f} dominates the "
+          f"best ring member "
+          f"{max(r['copy_profit_max'] for r in rows):+.2f}; 0 false "
+          f"positives; verdicts -> {args.out_dir}/audit_verdicts.json")
 
 
 if __name__ == "__main__":

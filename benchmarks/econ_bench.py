@@ -1,0 +1,295 @@
+"""Token-economics benchmark: the paper's core economic invariant under
+attack-ROI sweeps.
+
+The live deployment "paid out real-valued tokens based on the value of
+contributions"; the claim that makes that economy *stable* is that the
+honest strategy is the most profitable one. This bench sweeps adversary
+mixes x emission curves through the simulator's settled token ledger
+(``repro.econ``) and asserts, for every cell:
+
+  * **honest dominance** — mean honest profit (emission credits minus
+    burns minus operating cost) strictly exceeds the mean profit of
+    every adversary behaviour present (copycat ring, sybil mirrors,
+    turncoats), cumulatively AND marginally over the back half of the
+    run (the post-detection era keeps paying honesty more);
+  * **bans defund** — every adversary the audit quorum banned earns a
+    final-round ledger payout < 5% of an honest peer's (the
+    token-space form of the audit bench's consensus-weight assertion)
+    and a strictly negative back-half profit: it keeps paying
+    operating costs while the settled ledger pays it ~nothing.
+    (Cumulative profit can be positive — a delayed copycat banks one
+    honest-looking round before its copy exists to flag — but a
+    banned attack has no future. Unbanned adversaries such as noise
+    turncoats get only the dominance guarantee: the Gauntlet is a
+    noisy contribution market, and a low-value payload can still win
+    an occasional scoring blip.)
+
+``--check`` additionally proves the ledger infrastructure claims CI
+gates on:
+
+  * **determinism** — two engines, same seed: byte-identical committed
+    ledger JSON;
+  * **replica bit-identity** — a multi-validator run where every
+    replica's independently computed settlement serializes identically
+    for every round (first write wins on chain; the rest must be
+    byte-equal no-ops).
+
+Emits a schema-stable series (``--out``, default
+``telemetry/BENCH_econ.json``) alongside the CSV, uploaded as the CI
+``econ-smoke`` artifact.
+
+Run:  PYTHONPATH=src python benchmarks/econ_bench.py [--rounds N]
+          [--curves halving constant decay] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "benchmarks")
+import common  # noqa: E402
+
+from repro.configs.registry import tiny_config             # noqa: E402
+from repro.econ import (EconConfig, PayoutLedger,          # noqa: E402
+                        profit_by_behavior, profits)
+from repro.sim import (HONEST_BEHAVIORS, PeerSpec,         # noqa: E402
+                       Scenario, SimEngine, ValidatorSpec,
+                       get_scenario)
+
+SCHEMA_VERSION = 1
+
+
+def _turncoat_mix(rounds: int, seed: int) -> Scenario:
+    """Honest fleet + two turncoats that flip to the §4 attacks early
+    enough that the post-flip era dominates their books.
+
+    The flips are noise and laziness — attacks that destroy the
+    *contribution value* the Gauntlet scores, so the claw-back is
+    economic. A ``byz_norm`` turncoat is deliberately absent: the
+    norm-rescale attack is *neutralized* by per-peer normalization
+    (``byzantine_bench`` proves cos ≈ clean), which means a rescaled
+    honest gradient is still an honest contribution — the defense goal
+    there is harmlessness, not defunding, and its payout is
+    seed-dependent rather than clawed back."""
+    flip = max(rounds // 4, 1)
+    return Scenario(
+        name="turncoat_economy", rounds=rounds, seed=seed,
+        peers=tuple(PeerSpec(uid=f"honest-{i}") for i in range(5)) + (
+            PeerSpec(uid="turncoat-noise",
+                     behavior_schedule=((flip, "byz_noise"),)),
+            PeerSpec(uid="turncoat-lazy",
+                     behavior_schedule=((flip, "lazy"),)),
+        ),
+        description="honest-then-attack flips; the economy must make "
+                    "the post-flip era unprofitable")
+
+
+MIXES = {
+    "copycat_ring": lambda rounds, seed: get_scenario(
+        "copycat_ring", rounds=rounds, seed=seed),
+    "sybil_mirror": lambda rounds, seed: get_scenario(
+        "sybil_mirror", rounds=rounds, seed=seed),
+    "turncoat": _turncoat_mix,
+}
+
+
+def run_mix(mix: str, curve: str, rounds: int, seed: int,
+            validators=None):
+    sc = MIXES[mix](rounds, seed)
+    econ = EconConfig(emission_curve=curve)
+    sc = dataclasses.replace(sc, econ=econ,
+                             **({"validators": validators}
+                                if validators else {}))
+    engine = SimEngine.from_scenario(sc, tiny_config(), batch=2,
+                                     seq_len=32)
+    t0 = time.perf_counter()
+    engine.run()
+    wall_s = time.perf_counter() - t0
+    behaviors = {uid: node.pc.behavior
+                 for uid, node in engine.peers.items()}
+    profit = profits(engine.chain.balances(), engine.roi)
+    by_behavior = profit_by_behavior(profit, behaviors)
+    # final-round ledger payouts (the consensus-weight assertion,
+    # recast in tokens)
+    last_credits = {}
+    for e in engine.chain.payouts(rounds - 1):
+        if e.kind == "credit" and e.uid in behaviors:
+            last_credits[e.uid] = last_credits.get(e.uid, 0.0) + e.amount
+    # marginal profit over the back half of the run: settled chain
+    # entries plus the engine's off-chain cost debits, per uid
+    tail = range(rounds - rounds // 2, rounds)
+    tail_profit = {uid: 0.0 for uid in behaviors}
+    for rnd in tail:
+        for e in engine.chain.payouts(rnd):
+            if e.uid in tail_profit:
+                tail_profit[e.uid] += e.signed()
+        for e in engine.roi.round_entries(rnd):
+            if e.uid in tail_profit:
+                tail_profit[e.uid] += e.signed()
+    banned = engine.telemetry.rounds[-1]["econ"]["banned"]
+    return {"engine": engine, "behaviors": behaviors, "profit": profit,
+            "by_behavior": by_behavior, "last_credits": last_credits,
+            "tail_profit": tail_profit, "banned": banned,
+            "wall_s": wall_s}
+
+
+def assert_honest_dominates(mix: str, curve: str, res) -> dict:
+    by = res["by_behavior"]
+    behaviors = res["behaviors"]
+    banned = set(res["banned"])
+    honest = [v for b, v in by.items() if b in HONEST_BEHAVIORS]
+    adversary = {b: v for b, v in by.items()
+                 if b not in HONEST_BEHAVIORS}
+    assert honest, (mix, curve, by)
+    honest_mean = float(np.mean(honest))
+    for b, v in adversary.items():
+        assert honest_mean > v, (
+            f"{mix}/{curve}: honest profit {honest_mean:.3f} does not "
+            f"dominate {b} ({v:.3f})")
+    # ...and marginally: the post-detection back half keeps paying the
+    # honest fleet more than it pays any adversary peer
+    honest_tail = [res["tail_profit"][u] for u, b in behaviors.items()
+                   if b in HONEST_BEHAVIORS]
+    honest_tail_mean = float(np.mean(honest_tail))
+    adv_tail = {u: res["tail_profit"][u]
+                for u, b in behaviors.items()
+                if b not in HONEST_BEHAVIORS}
+    for uid, v in sorted(adv_tail.items()):
+        assert honest_tail_mean > v, (
+            f"{mix}/{curve}: back-half honest profit "
+            f"{honest_tail_mean:.3f} does not dominate {uid} ({v:+.3f})")
+    # banned adversaries are defunded outright: negative back-half
+    # profit, and a final-round payout < 5% of an honest peer's
+    for uid in sorted(banned & set(adv_tail)):
+        assert adv_tail[uid] < 0, (
+            f"{mix}/{curve}: banned adversary {uid} still nets "
+            f"{adv_tail[uid]:+.3f} over the back half")
+    honest_last = [res["last_credits"].get(u, 0.0)
+                   for u, b in behaviors.items()
+                   if b in HONEST_BEHAVIORS]
+    banned_last = [res["last_credits"].get(u, 0.0)
+                   for u, b in behaviors.items()
+                   if b not in HONEST_BEHAVIORS and u in banned]
+    honest_last_mean = float(np.mean(honest_last))
+    banned_last_max = max(banned_last, default=0.0)
+    assert honest_last_mean > 0, (mix, curve, res["last_credits"])
+    assert banned_last_max < 0.05 * honest_last_mean, (
+        f"{mix}/{curve}: banned adversary final-round payout "
+        f"{banned_last_max:.4f} >= 5% of honest mean "
+        f"{honest_last_mean:.4f}")
+    return {"honest_profit": honest_mean,
+            "worst_adversary": (max(adversary, key=adversary.get)
+                                if adversary else None),
+            "worst_adversary_profit": (max(adversary.values())
+                                       if adversary else None),
+            "banned_adversaries": len(banned & set(adv_tail)),
+            "banned_last_round_share": (banned_last_max
+                                        / honest_last_mean),
+            "adv_tail_profit_max": max(adv_tail.values(), default=None),
+            "by_behavior": by}
+
+
+def check_determinism(rounds: int) -> None:
+    """Same seed => byte-identical committed ledger across two fresh
+    engines (the CI econ-smoke determinism gate)."""
+    exports = []
+    for _ in range(2):
+        res = run_mix("copycat_ring", "halving", rounds, seed=0)
+        exports.append(
+            PayoutLedger(res["engine"].chain.payouts()).to_json())
+    assert exports[0] == exports[1], \
+        "ledger export differs across same-seed runs"
+    print(f"[econ_bench --check] determinism: {len(exports[0])}-byte "
+          f"ledger byte-identical across 2 seeds-0 runs")
+
+
+def check_replicas(rounds: int) -> None:
+    """Every validator replica independently derives the identical
+    settlement for every round (bit-identical balance replay)."""
+    validators = (ValidatorSpec(uid="val-a", stake=1000.0),
+                  ValidatorSpec(uid="val-b", stake=600.0),
+                  ValidatorSpec(uid="val-c", stake=300.0))
+    res = run_mix("sybil_mirror", "halving", rounds, seed=0,
+                  validators=validators)
+    engine = res["engine"]
+    for rnd, per_validator in sorted(engine.settlements.items()):
+        assert len(per_validator) == len(validators), (rnd, per_validator)
+        blobs = set(per_validator.values())
+        assert len(blobs) == 1, \
+            f"round {rnd}: replicas computed different settlements"
+    # and the chain's committed fold replays bit-identically
+    ledger = PayoutLedger(engine.chain.payouts())
+    replayed = PayoutLedger.replay(json.loads(ledger.to_json()))
+    assert replayed.to_json() == ledger.to_json()
+    assert engine.chain.balances() == replayed.balances()
+    print(f"[econ_bench --check] replicas: {len(validators)} validators "
+          f"x {len(engine.settlements)} rounds settled byte-identically")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mixes", nargs="*", default=sorted(MIXES))
+    ap.add_argument("--curves", nargs="*",
+                    default=["halving", "constant", "decay"])
+    ap.add_argument("--check", action="store_true",
+                    help="CI acceptance: also prove ledger determinism "
+                         "across seeds and replica bit-identity")
+    ap.add_argument("--out", default="telemetry/BENCH_econ.json",
+                    help="schema-stable series artifact path")
+    args = ap.parse_args()
+
+    rows = []
+    for mix in args.mixes:
+        for curve in args.curves:
+            res = run_mix(mix, curve, args.rounds, args.seed)
+            verdict = assert_honest_dominates(mix, curve, res)
+            rows.append({
+                "mix": mix, "curve": curve, "rounds": args.rounds,
+                "seed": args.seed,
+                "honest_profit": verdict["honest_profit"],
+                "worst_adversary": verdict["worst_adversary"],
+                "worst_adversary_profit":
+                    verdict["worst_adversary_profit"],
+                "banned_adversaries": verdict["banned_adversaries"],
+                "banned_last_round_share":
+                    verdict["banned_last_round_share"],
+                "adv_tail_profit_max": verdict["adv_tail_profit_max"],
+                "supply": sum(res["engine"].chain.balances().values()),
+                "wall_s": res["wall_s"],
+            })
+            print(f"[econ_bench] {mix}/{curve}: honest "
+                  f"{verdict['honest_profit']:+.2f} vs worst adversary "
+                  f"{verdict['worst_adversary']} "
+                  f"{verdict['worst_adversary_profit']:+.2f}")
+
+    common.emit("econ_bench", rows,
+                ["mix", "curve", "honest_profit", "worst_adversary",
+                 "worst_adversary_profit", "banned_adversaries",
+                 "banned_last_round_share", "adv_tail_profit_max",
+                 "supply", "wall_s"])
+
+    if args.check:
+        check_determinism(max(args.rounds // 2, 3))
+        check_replicas(max(args.rounds // 2, 3))
+
+    series = [{k: v for k, v in r.items() if k != "wall_s"}
+              for r in rows]
+    common.emit_root_json(args.out, {
+        "schema_version": SCHEMA_VERSION,
+        "default_econ": dataclasses.asdict(EconConfig()),
+        "series": series,
+    })
+    print(f"\n[econ_bench] honest profit strictly dominates every "
+          f"adversary behaviour across {len(rows)} mix x curve cells; "
+          f"series -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

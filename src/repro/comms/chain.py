@@ -14,15 +14,26 @@ only derivable once its block exists, so work cannot be precomputed or
 ground — and a **batch-commitment bulletin** stores each peer's
 commit-then-reveal digest of the data it consumed (first write per
 (peer, round) wins, like any chain extrinsic).
+
+Token-economy additions (``repro.econ``): a **registration log** (every
+``register_peer`` call, so re-registrations are chargeable), a
+**payout bulletin** (``post_payouts``: one canonical settlement entry
+tuple per round, first write wins) and **balances** as a pure fold over
+the committed entries — every replica that reads the same chain derives
+bit-identical balances. Committing a settlement also applies its slash
+entries to live validator stake, so a deviant validator loses consensus
+influence going forward.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.econ.ledger import LedgerEntry, fold_balances
 
 
 @dataclasses.dataclass
@@ -51,6 +62,8 @@ class Chain:
         self._genesis = hashlib.blake2b(
             f"genesis:{genesis_seed}".encode(), digest_size=16).digest()
         self._commitments: Dict[Tuple[str, int], bytes] = {}
+        self._registration_log: List[Tuple[int, str]] = []  # (block, uid)
+        self._payouts: Dict[int, Tuple[LedgerEntry, ...]] = {}
 
     # ---- block hashes (assignment entropy) -------------------------
     def block_hash(self, block: Optional[int] = None) -> bytes:
@@ -97,7 +110,23 @@ class Chain:
         rec = PeerRecord(uid=uid, bucket_read_key=bucket_read_key,
                          registered_at=self._block)
         self.peers[uid] = rec
+        self._registration_log.append((self._block, uid))
         return rec
+
+    def registrations(self, start_block: int, end_block: int
+                      ) -> List[Tuple[int, str, int]]:
+        """Registrations with ``start_block <= block < end_block`` as
+        ``(block, uid, prior_count)`` — ``prior_count`` is how many
+        times the uid registered before this entry, so settlement can
+        charge re-registrations (``repro.econ``) from chain state
+        alone."""
+        out = []
+        seen: Dict[str, int] = {}
+        for block, uid in self._registration_log:
+            if start_block <= block < end_block:
+                out.append((block, uid, seen.get(uid, 0)))
+            seen[uid] = seen.get(uid, 0) + 1
+        return out
 
     def deregister_peer(self, uid: str) -> None:
         self.peers.pop(uid, None)
@@ -141,6 +170,58 @@ class Chain:
         """Drop a validator's posted weights (e.g. pruning an offline
         validator so its stale bulletin stops steering consensus)."""
         self._weights.pop(validator_uid, None)
+
+    def posted_validators(self) -> List[str]:
+        """Validators with a live weight bulletin (they worked this
+        round; ``repro.econ`` pays validator emission only to these)."""
+        return sorted(self._weights)
+
+    def posted_weights(self, validator_uid: str) -> Dict[str, float]:
+        return dict(self._weights.get(validator_uid, {}))
+
+    # ---- payout bulletin (token economy, repro.econ) ----------------
+    def post_payouts(self, validator_uid: str, round_idx: int,
+                     entries: Sequence[LedgerEntry]) -> bool:
+        """Commit one round's settlement to the ledger bulletin.
+
+        First write per round wins (extrinsic semantics, like batch
+        commitments): every replica computes the settlement from the
+        same posted state, so whichever lands first *is* the canonical
+        one and the rest are byte-identical no-ops. Committing applies
+        the round's slash entries to live validator stake — a deviant
+        validator's consensus influence shrinks from the next median
+        on. Returns True iff this call created the round's record."""
+        assert validator_uid in self.validators, "must stake to settle"
+        if round_idx in self._payouts:
+            return False
+        committed = tuple(entries)
+        self._payouts[round_idx] = committed
+        for e in committed:
+            if e.kind == "slash" and e.uid in self.validators:
+                v = self.validators[e.uid]
+                v.stake = max(v.stake - e.amount, 0.0)
+        return True
+
+    def payouts(self, round_idx: Optional[int] = None
+                ) -> Tuple[LedgerEntry, ...]:
+        """Committed settlement entries — one round's, or the whole log
+        in round order (the fold ``balances`` reduces)."""
+        if round_idx is not None:
+            return self._payouts.get(round_idx, ())
+        return tuple(e for r in sorted(self._payouts)
+                     for e in self._payouts[r])
+
+    def settled_rounds(self) -> List[int]:
+        return sorted(self._payouts)
+
+    def balances(self) -> Dict[str, float]:
+        """Per-uid token balances: a pure fold over the committed
+        payout log (``repro.econ.ledger.fold_balances``) — replicas
+        reading the same chain agree bit-identically."""
+        return fold_balances(self.payouts())
+
+    def balance(self, uid: str) -> float:
+        return self.balances().get(uid, 0.0)
 
     def consensus_weights(self) -> Dict[str, float]:
         """Stake-weighted median across validators (Yuma-consensus-lite)."""

@@ -1,0 +1,43 @@
+"""Token economics: emission, payout ledger, stake slashing, attack ROI.
+
+The paper's deployment claim — the live run "paid out real-valued
+tokens to participants based on the value of their contributions" — as
+an auditable subsystem on top of the consensus weights:
+
+* :mod:`repro.econ.emission` — deterministic per-round emission curves
+  (constant / halving / decay), the peer/validator split, registration
+  burns, and :class:`EconConfig`, the knob block scenarios carry;
+* :mod:`repro.econ.ledger` — append-only :class:`PayoutLedger` of
+  credit/debit/burn/slash entries keyed to chain blocks, with balances
+  as a pure fold and byte-deterministic JSON export/replay;
+* :mod:`repro.econ.slashing` — validator stake slashing on consensus
+  deviation and audit-verdict burn penalties for peers;
+* :mod:`repro.econ.roi` — per-behaviour operating-cost model and the
+  profit curves the attack-ROI benches assert dominance over;
+* :mod:`repro.econ.settlement` — the per-round fold from posted chain
+  state to the canonical entry tuple every replica must agree on
+  (committed via ``Chain.post_payouts``, first write per round wins).
+
+Settlement is host-side float/dict arithmetic like
+``Chain.consensus_weights`` — it adds no jit entry points and no
+per-round compiles.
+"""
+from repro.econ.emission import (EMISSION_CURVES, EconConfig,
+                                 round_emission, split_emission)
+from repro.econ.ledger import (ENTRY_KINDS, LedgerEntry, PayoutLedger,
+                               fold_balances, make_entry)
+from repro.econ.roi import (COST_CLASSES, behavior_cost, cost_entries,
+                            profit_by_behavior, profits)
+from repro.econ.settlement import registration_entries, settle_round
+from repro.econ.slashing import (audit_penalty_entries, slash_entries,
+                                 validator_deviation)
+
+__all__ = [
+    "EMISSION_CURVES", "EconConfig", "round_emission", "split_emission",
+    "ENTRY_KINDS", "LedgerEntry", "PayoutLedger", "fold_balances",
+    "make_entry",
+    "COST_CLASSES", "behavior_cost", "cost_entries",
+    "profit_by_behavior", "profits",
+    "registration_entries", "settle_round",
+    "audit_penalty_entries", "slash_entries", "validator_deviation",
+]

@@ -1,0 +1,187 @@
+"""Append-only, replayable payout ledger keyed to chain blocks.
+
+The economic state of the network is a *log*, not a mutable balance
+table: every token movement is one immutable :class:`LedgerEntry`
+(credit / debit / burn / slash) stamped with the chain block and round
+it settled at, and a balance is nothing but a fold over that log. That
+is what makes the economy auditable the same way the incentive weights
+are — any replica that holds the same entries derives bit-identical
+balances, and an exported ledger can be replayed from JSON and checked
+against the live chain (``tests/test_econ.py`` pins this round trip).
+
+Determinism follows the ``repro.sim.telemetry`` native-coercion
+contract: amounts and block/round stamps are coerced to native Python
+scalars at *append* time (an ``np.float64`` that sneaks in must not
+change the export), and ``to_json`` is ``json.dumps(..., sort_keys=
+True, indent=2)`` — the same seed yields a byte-identical file. This
+module is intentionally import-free of the rest of ``repro`` so the
+chain stub (``repro.comms.chain``) can commit entries without a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+# entry kinds and their balance sign: credits mint into a uid's balance,
+# everything else leaves it (a burn destroys supply, a slash destroys
+# staked supply, a debit is an off-chain cost in ROI accounting)
+ENTRY_KINDS = ("credit", "debit", "burn", "slash")
+
+
+def _native(value: Any) -> Any:
+    """Scalar arm of ``repro.sim.telemetry.coerce_native`` (local copy:
+    the ledger must stay importable from the chain stub without pulling
+    in the simulator)."""
+    if hasattr(value, "item") and getattr(value, "ndim", 0) == 0:
+        return value.item()
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerEntry:
+    """One immutable token movement, stamped to the chain clock."""
+
+    block: int
+    round: int
+    kind: str        # one of ENTRY_KINDS
+    uid: str
+    amount: float    # always >= 0; ``kind`` carries the sign
+    reason: str = ""
+
+    def signed(self) -> float:
+        return self.amount if self.kind == "credit" else -self.amount
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"block": self.block, "round": self.round,
+                "kind": self.kind, "uid": self.uid,
+                "amount": self.amount, "reason": self.reason}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "LedgerEntry":
+        return cls(block=int(d["block"]), round=int(d["round"]),
+                   kind=str(d["kind"]), uid=str(d["uid"]),
+                   amount=float(d["amount"]),
+                   reason=str(d.get("reason", "")))
+
+
+def make_entry(kind: str, uid: str, amount: float, *, block: int,
+               round_idx: int, reason: str = "") -> LedgerEntry:
+    """Validated, native-coerced entry constructor (the one place the
+    ledger's invariants are enforced)."""
+    if kind not in ENTRY_KINDS:
+        raise ValueError(f"unknown ledger entry kind {kind!r}; "
+                         f"expected one of {ENTRY_KINDS}")
+    amount = float(_native(amount))
+    if not math.isfinite(amount) or amount < 0:
+        raise ValueError(f"ledger amount must be finite and >= 0, "
+                         f"got {amount!r} for {kind}:{uid}")
+    return LedgerEntry(block=int(_native(block)),
+                       round=int(_native(round_idx)),
+                       kind=kind, uid=str(uid), amount=amount,
+                       reason=str(reason))
+
+
+def fold_balances(entries: Iterable[LedgerEntry]) -> Dict[str, float]:
+    """Per-uid balances as a pure fold over the log (sorted keys)."""
+    out: Dict[str, float] = {}
+    for e in entries:
+        out[e.uid] = out.get(e.uid, 0.0) + e.signed()
+    return dict(sorted(out.items()))
+
+
+class PayoutLedger:
+    """Append-only entry log with balance folds and deterministic JSON
+    export/replay."""
+
+    def __init__(self, entries: Iterable[LedgerEntry] = ()):
+        self.entries: List[LedgerEntry] = []
+        self.extend(entries)
+
+    # ------------------------------------------------------------ append
+    def append(self, entry: LedgerEntry) -> LedgerEntry:
+        # route through make_entry so replayed / hand-built entries meet
+        # the same invariants as freshly minted ones
+        e = make_entry(entry.kind, entry.uid, entry.amount,
+                       block=entry.block, round_idx=entry.round,
+                       reason=entry.reason)
+        self.entries.append(e)
+        return e
+
+    def extend(self, entries: Iterable[LedgerEntry]) -> None:
+        for e in entries:
+            self.append(e)
+
+    def credit(self, uid: str, amount: float, *, block: int,
+               round_idx: int, reason: str = "") -> LedgerEntry:
+        return self.append(make_entry("credit", uid, amount, block=block,
+                                      round_idx=round_idx, reason=reason))
+
+    def debit(self, uid: str, amount: float, *, block: int,
+              round_idx: int, reason: str = "") -> LedgerEntry:
+        return self.append(make_entry("debit", uid, amount, block=block,
+                                      round_idx=round_idx, reason=reason))
+
+    def burn(self, uid: str, amount: float, *, block: int,
+             round_idx: int, reason: str = "") -> LedgerEntry:
+        return self.append(make_entry("burn", uid, amount, block=block,
+                                      round_idx=round_idx, reason=reason))
+
+    def slash(self, uid: str, amount: float, *, block: int,
+              round_idx: int, reason: str = "") -> LedgerEntry:
+        return self.append(make_entry("slash", uid, amount, block=block,
+                                      round_idx=round_idx, reason=reason))
+
+    # ----------------------------------------------------------- queries
+    def balances(self) -> Dict[str, float]:
+        return fold_balances(self.entries)
+
+    def balance(self, uid: str) -> float:
+        return sum(e.signed() for e in self.entries if e.uid == uid)
+
+    def round_entries(self, round_idx: int) -> Tuple[LedgerEntry, ...]:
+        return tuple(e for e in self.entries if e.round == round_idx)
+
+    def supply(self) -> Dict[str, float]:
+        """Aggregate token flows: minted emission vs destroyed supply."""
+        by_kind = {k: 0.0 for k in ENTRY_KINDS}
+        for e in self.entries:
+            by_kind[e.kind] += e.amount
+        return {
+            "minted": by_kind["credit"],
+            "debited": by_kind["debit"],
+            "burned": by_kind["burn"],
+            "slashed": by_kind["slash"],
+            "circulating": sum(self.balances().values()),
+        }
+
+    # ------------------------------------------------------------ export
+    def to_dict(self) -> Dict[str, Any]:
+        return {"entries": [e.to_dict() for e in self.entries],
+                "balances": self.balances(),
+                "supply": self.supply()}
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps(self.to_dict(), sort_keys=True, indent=2)
+        if path:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text
+
+    @classmethod
+    def replay(cls, doc: Dict[str, Any]) -> "PayoutLedger":
+        """Rebuild a ledger from an exported dict; the fold is the only
+        balance derivation, so replayed balances either match the
+        export byte-for-byte or the export was corrupt."""
+        ledger = cls(LedgerEntry.from_dict(d)
+                     for d in doc.get("entries", ()))
+        exported = doc.get("balances")
+        if exported is not None and ledger.balances() != exported:
+            raise ValueError("ledger replay diverged from the exported "
+                             "balances — entries and balances disagree")
+        return ledger

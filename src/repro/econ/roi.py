@@ -1,0 +1,98 @@
+"""Attack-ROI accounting: fold hardware/opportunity costs into the
+ledger so scenarios answer the paper's economic questions in tokens.
+
+"Does honest profit dominate?" is not answerable from payouts alone —
+an attacker's edge is that copying is nearly free while honest training
+burns real compute. So each behaviour carries a per-round cost class:
+
+* ``full``  — real local training (honest, more_data, desync, late,
+  and the byzantine transforms, which corrupt *computed* gradients);
+* ``copy``  — republishing someone else's payload (the copycat ring and
+  sybil mirrors: bandwidth, no compute);
+* ``idle``  — lazy / offline free-riding.
+
+The engine debits these costs into a local :class:`PayoutLedger` (they
+are off-chain — a peer's electricity bill is not consensus state), and
+profit is the sum of the two folds: chain balance (emission minus burns)
+plus cost balance (all debits, hence negative). ``profit_by_behavior``
+reduces that to the per-behaviour curves ``benchmarks/econ_bench.py``
+sweeps, asserting the paper's core invariant — honest expected profit
+strictly dominates every shipped adversary behaviour.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional
+
+from repro.econ.emission import EconConfig
+from repro.econ.ledger import LedgerEntry, PayoutLedger, make_entry
+
+# behaviour -> cost class; unknown behaviours default to "full" (the
+# conservative choice: a novel attack is assumed to pay for compute)
+COST_CLASSES: Dict[str, str] = {
+    "honest": "full",
+    "more_data": "full",
+    "desync": "full",
+    "late": "full",
+    "byz_norm": "full",
+    "byz_noise": "full",
+    "lazy": "idle",
+    "offline": "idle",
+    "copycat": "copy",
+    "copycat_delayed": "copy",
+    "copycat_noise": "copy",
+}
+
+
+def behavior_cost(ec: EconConfig, behavior: str,
+                  data_multiplier: int = 1) -> float:
+    """Tokens one round of this behaviour costs its operator. Full
+    compute scales with the data multiplier (a more_data peer trains
+    proportionally more); copying and idling do not."""
+    cls = COST_CLASSES.get(behavior, "full")
+    if cls == "copy":
+        return ec.cost_copy_round
+    if cls == "idle":
+        return ec.cost_idle_round
+    return ec.cost_full_round * max(int(data_multiplier), 1)
+
+
+def cost_entries(ec: EconConfig, behaviors: Mapping[str, str], *,
+                 block: int, round_idx: int,
+                 multipliers: Optional[Mapping[str, int]] = None
+                 ) -> List[LedgerEntry]:
+    """One debit per active peer for this round's operating cost."""
+    multipliers = multipliers or {}
+    out: List[LedgerEntry] = []
+    for uid, behavior in sorted(behaviors.items()):
+        cost = behavior_cost(ec, behavior, multipliers.get(uid, 1))
+        if cost > 0:
+            out.append(make_entry("debit", uid, cost, block=block,
+                                  round_idx=round_idx,
+                                  reason=f"cost:{behavior}"))
+    return out
+
+
+def profits(chain_balances: Mapping[str, float],
+            cost_ledger: PayoutLedger) -> Dict[str, float]:
+    """Net profit per uid: on-chain balance plus the (negative) cost
+    fold. Uids appearing in either side are covered."""
+    costs = cost_ledger.balances()
+    out = {}
+    for uid in sorted(set(chain_balances) | set(costs)):
+        out[uid] = chain_balances.get(uid, 0.0) + costs.get(uid, 0.0)
+    return out
+
+
+def profit_by_behavior(profit: Mapping[str, float],
+                       behaviors: Mapping[str, str]) -> Dict[str, float]:
+    """Mean profit per behaviour class — the per-behaviour profit curve
+    one scenario run contributes. Uids without a known behaviour
+    (validators) are skipped."""
+    sums: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for uid, behavior in behaviors.items():
+        if uid not in profit:
+            continue
+        sums[behavior] = sums.get(behavior, 0.0) + profit[uid]
+        counts[behavior] = counts.get(behavior, 0) + 1
+    return {b: sums[b] / counts[b] for b in sorted(sums)}

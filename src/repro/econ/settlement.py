@@ -1,0 +1,93 @@
+"""Round settlement: turn one round's posted chain state into the
+ledger entries every replica must agree on.
+
+``settle_round`` is the economic analogue of ``Chain.consensus_weights``
+— a pure host-side fold over state that is already on chain (posted
+weight bulletins, stake, the registration log) plus the audit verdict
+sets the validator quorum resolved this round. Given identical inputs
+it produces an identical entry tuple on every replica, which is the
+bit-identity property ``Chain.post_payouts`` (first write per round
+wins) turns into a single canonical ledger.
+
+Entry order within a round is fixed — registration burns, then peer
+emission, then validator emission, then audit penalties, then validator
+slashes, each sorted by uid — so two replicas' settlements can be
+compared byte-for-byte, not just as multisets.
+
+No jax anywhere in this path: settlement is numpy-free float/dict
+arithmetic, adding zero jit entry points and zero per-round compiles
+(the ``gauntlet_bench --check`` acceptance criterion).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+from repro.econ.emission import EconConfig, split_emission
+from repro.econ.ledger import LedgerEntry, make_entry
+from repro.econ.slashing import audit_penalty_entries, slash_entries
+
+
+def registration_entries(ec: EconConfig, chain, round_idx: int, *,
+                         block: int) -> Tuple[LedgerEntry, ...]:
+    """Burns for every registration that landed in this round's block
+    span. A uid with a prior registration on the log pays the
+    re-registration cost on top — flagged (or merely flighty) peers
+    cannot churn identities for free."""
+    start = round_idx * chain.blocks_per_round
+    end = (round_idx + 1) * chain.blocks_per_round
+    out = []
+    for _, uid, prior in chain.registrations(start, end):
+        if ec.registration_burn > 0:
+            out.append(make_entry("burn", uid, ec.registration_burn,
+                                  block=block, round_idx=round_idx,
+                                  reason="register"))
+        if prior > 0 and ec.rereg_cost > 0:
+            out.append(make_entry("burn", uid, ec.rereg_cost,
+                                  block=block, round_idx=round_idx,
+                                  reason=f"re-register (x{prior + 1})"))
+    return tuple(out)
+
+
+def settle_round(ec: EconConfig, chain, round_idx: int, *,
+                 consensus: Optional[Mapping[str, float]] = None,
+                 banned: Iterable[str] = (),
+                 flagged: Optional[Mapping[str, str]] = None
+                 ) -> Tuple[LedgerEntry, ...]:
+    """Compute (do not post) one round's canonical settlement.
+
+    ``consensus`` may be passed when the caller already resolved the
+    stake-weighted median this round (the engine does); otherwise it is
+    recomputed from the chain. ``banned`` is the quorum's strike set
+    (uids currently serving an audit ban), ``flagged`` the fresh
+    verdicts of this round (uid -> reason). Both default empty so the
+    chain-only call sites (tests, replay tooling) stay simple.
+    """
+    if not ec.enabled:
+        return ()
+    block = chain.block
+    cons: Dict[str, float] = dict(consensus if consensus is not None
+                                  else chain.consensus_weights())
+    posted = {v: chain.posted_weights(v)
+              for v in chain.posted_validators()}
+    stakes = {v: chain.validators[v].stake for v in posted
+              if v in chain.validators}
+    flagged = dict(flagged or {})
+
+    entries = list(registration_entries(ec, chain, round_idx,
+                                        block=block))
+    peer_pay, val_pay = split_emission(ec, round_idx, cons, stakes,
+                                       banned=banned)
+    for uid, amount in peer_pay.items():
+        entries.append(make_entry("credit", uid, amount, block=block,
+                                  round_idx=round_idx,
+                                  reason="emission:peer"))
+    for uid, amount in val_pay.items():
+        entries.append(make_entry("credit", uid, amount, block=block,
+                                  round_idx=round_idx,
+                                  reason="emission:validator"))
+    entries.extend(audit_penalty_entries(ec, flagged, block=block,
+                                         round_idx=round_idx))
+    entries.extend(slash_entries(ec, posted_weights=posted,
+                                 consensus=cons, stakes=stakes,
+                                 block=block, round_idx=round_idx))
+    return tuple(entries)

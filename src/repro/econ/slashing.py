@@ -1,0 +1,91 @@
+"""Stake slashing and audit-verdict penalties: the punitive half of the
+token economy.
+
+Two distinct levers, matching the two distinct trust models:
+
+* **Validators** are staked — their failure mode is posting weights far
+  from what the staked quorum agrees on (lazy scoring, skewed posting,
+  collusion). A validator whose posted bulletin lands further than
+  ``slash_threshold`` (total-variation distance, L1/2 over normalized
+  weight vectors) from the stake-weighted consensus median forfeits
+  ``slash_fraction`` of its stake. The slash is a ledger entry, and the
+  chain reduces the validator's live stake when the entry is committed
+  (``Chain.post_payouts``), so a chronically deviant validator bleeds
+  consensus influence round over round.
+
+* **Peers** are permissionless — their penalty rides the existing audit
+  verdicts (``repro.core.gauntlet`` strikes): a fresh flag burns
+  ``audit_penalty`` on top of the zeroed emission the ban already
+  implies, and rejoining after a ban pays the re-registration cost
+  (``repro.econ.emission``), so the copycat break-even point the paper
+  cares about is strictly negative.
+
+Host-side float/dict arithmetic only — no jax, no per-round compiles.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping
+
+from repro.econ.emission import EconConfig
+from repro.econ.ledger import LedgerEntry, make_entry
+
+
+def _normalize(weights: Mapping[str, float]) -> Dict[str, float]:
+    total = sum(w for w in weights.values() if w > 0)
+    if total <= 0:
+        return {}
+    return {p: w / total for p, w in weights.items() if w > 0}
+
+
+def validator_deviation(posted: Mapping[str, float],
+                        consensus: Mapping[str, float]) -> float:
+    """Total-variation distance in [0, 1] between a validator's posted
+    weights and the consensus median, both renormalized over their
+    union support. 0 = identical distribution, 1 = disjoint support."""
+    a, b = _normalize(posted), _normalize(consensus)
+    if not a and not b:
+        return 0.0
+    support = set(a) | set(b)
+    return 0.5 * sum(abs(a.get(p, 0.0) - b.get(p, 0.0))
+                     for p in support)
+
+
+def slash_entries(ec: EconConfig, *, posted_weights: Mapping[str,
+                                                            Mapping[str,
+                                                                    float]],
+                  consensus: Mapping[str, float],
+                  stakes: Mapping[str, float],
+                  block: int, round_idx: int) -> List[LedgerEntry]:
+    """Slash entries for every posting validator whose bulletin deviates
+    past the threshold. Pure function of the posted chain state — every
+    replica derives the identical list."""
+    if not consensus:
+        return []
+    out: List[LedgerEntry] = []
+    for v in sorted(posted_weights):
+        stake = stakes.get(v, 0.0)
+        if stake <= 0:
+            continue
+        dev = validator_deviation(posted_weights[v], consensus)
+        if dev > ec.slash_threshold:
+            out.append(make_entry(
+                "slash", v, stake * ec.slash_fraction,
+                block=block, round_idx=round_idx,
+                reason=f"weights deviate {dev:.3f} from consensus "
+                       f"median (> {ec.slash_threshold})"))
+    return out
+
+
+def audit_penalty_entries(ec: EconConfig,
+                          flagged: Mapping[str, str], *,
+                          block: int,
+                          round_idx: int) -> List[LedgerEntry]:
+    """Burn entries for peers freshly flagged by the audit layer this
+    round (``RoundContext.audit_flagged``: uid -> reason). The ban
+    itself zeroes their emission; this makes the flag cost tokens the
+    moment it lands."""
+    if ec.audit_penalty <= 0:
+        return []
+    return [make_entry("burn", uid, ec.audit_penalty, block=block,
+                       round_idx=round_idx, reason=f"audit:{reason}")
+            for uid, reason in sorted(flagged.items())]

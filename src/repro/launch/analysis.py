@@ -391,6 +391,23 @@ def sim_telemetry_summary(telemetry) -> Dict:
         "audit_flagged_peers": flagged,
         "audit_flagged_final_share": flagged_share,
     })
+    # token-economy digest (repro.econ) — only for exports whose rounds
+    # carry settled ``econ`` records (pre-econ exports degrade silently)
+    econ_rounds = [r["econ"] for r in rounds if r.get("econ")]
+    if econ_rounds:
+        last_econ = econ_rounds[-1]
+        base.update({
+            "econ_total_emitted": sum(e.get("emission", 0.0)
+                                      for e in econ_rounds),
+            "econ_total_burned": sum(e.get("burned", 0.0)
+                                     for e in econ_rounds),
+            "econ_total_slashed": sum(e.get("slashed", 0.0)
+                                      for e in econ_rounds),
+            "econ_final_supply": last_econ.get("supply"),
+            "econ_flagged_final_balance": {
+                uid: (last_econ.get("balances") or {}).get(uid)
+                for uid in flagged},
+        })
     # wall-clock digest from the optional perf side-channel (exports
     # written with include_perf=True): mean per-stage milliseconds
     # across rounds and validators — diagnostic only, not seeded

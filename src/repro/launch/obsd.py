@@ -12,6 +12,7 @@ deciding, live:
     curl localhost:9100/v1/system/topology      # peers/validators/links
     curl localhost:9100/v1/rounds               # recent round records
     curl localhost:9100/v1/explain?uid=core-0   # per-peer verdicts
+    curl localhost:9100/v1/econ                 # token ledger view
     curl -N localhost:9100/v1/rounds/stream     # SSE round feed
 
 ``--smoke`` is the CI acceptance mode: it runs the scenario twice —
@@ -92,7 +93,18 @@ REQUIRED_METRICS = (
     "gauntlet_compiles_total", "gauntlet_stage_ms",
     "gauntlet_fast_checks_total", "gauntlet_eval_set_size",
     "sim_honest_share", "sim_active_peers", "sim_network_events_total",
+    "econ_emission_tokens", "econ_supply_tokens",
+    "econ_burned_tokens_total",
 )
+
+
+def _check_econ(snap: dict) -> None:
+    for key in ("round", "emission", "payouts", "balances", "profit",
+                "supply", "burned", "slashed"):
+        assert key in snap, f"/v1/econ missing {key!r}"
+    assert isinstance(snap["balances"], dict) and snap["balances"], \
+        "/v1/econ served no balances"
+    json.dumps(snap)   # JSON-clean
 
 
 def _check_metrics(text: str) -> None:
@@ -146,8 +158,11 @@ def _smoke(args) -> int:
         explains = json.loads(_get(service.url("/v1/explain?round=0")))
         assert explains and all("why" in r for r in explains), \
             "explain records missing"
-        print(f"[obsd --smoke] endpoints: metrics/topology/rounds OK, "
-              f"{len(explains)} explain records for round 0")
+        assert all("payout" in r and "balance" in r for r in explains), \
+            "explain records missing econ fields"
+        _check_econ(json.loads(_get(service.url("/v1/econ"))))
+        print(f"[obsd --smoke] endpoints: metrics/topology/rounds/econ "
+              f"OK, {len(explains)} explain records for round 0")
 
         # 3) the SSE stream delivered the round records live
         deadline = time.time() + 10

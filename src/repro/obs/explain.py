@@ -47,7 +47,8 @@ def _why(rec: Dict[str, Any]) -> str:
 
 def explain_round(round_idx: int, validator, ctx,
                   consensus: Optional[Dict[str, float]] = None,
-                  behaviors: Optional[Dict[str, str]] = None
+                  behaviors: Optional[Dict[str, str]] = None,
+                  econ: Optional[Dict[str, Any]] = None
                   ) -> Dict[str, Dict[str, Any]]:
     """Build the per-peer records for one validator's finished round.
 
@@ -55,7 +56,11 @@ def explain_round(round_idx: int, validator, ctx,
     stages have run on ``ctx``; ``consensus`` is the stake-median
     fleet weight map when multiple validators ran (None single-
     validator); ``behaviors`` is the sim's ground-truth behaviour map
-    (absent on live networks — the field is diagnostic only).
+    (absent on live networks — the field is diagnostic only); ``econ``
+    is the engine's settled-round view (``repro.econ``) — when present
+    each record carries the peer's round payout and running ledger
+    balance, so "why did peer 17 earn 0 tokens" is answerable next to
+    "why was its weight 0".
     """
     records: Dict[str, Dict[str, Any]] = {}
     for uid in ctx.active_peers:
@@ -81,6 +86,10 @@ def explain_round(round_idx: int, validator, ctx,
         }
         if behaviors is not None:
             rec["behavior"] = behaviors.get(uid)
+        if econ is not None:
+            rec["payout"] = float(econ.get("payouts", {}).get(uid, 0.0))
+            rec["balance"] = econ.get("balances", {}).get(uid)
+            rec["profit"] = econ.get("profit", {}).get(uid)
         rec["why"] = _why(rec)
         records[uid] = rec
     return records

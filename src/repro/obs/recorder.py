@@ -27,6 +27,11 @@ Metric names (the ``/metrics`` exposition):
 ``sim_val_loss``                 checkpoint validation loss (gauge)
 ``sim_network_events_total``     bucket-store transit counters
 ``sim_payload_bytes_total``      submitted payload bytes
+``econ_emission_tokens``         last settled round's emission (gauge)
+``econ_supply_tokens``           circulating supply (gauge)
+``econ_burned_tokens_total``     registration + audit-penalty burns
+``econ_slashed_tokens_total``    validator stake slashed
+``econ_balance_tokens``          per-uid ledger balance (gauge)
 =============================== ======================================
 """
 from __future__ import annotations
@@ -102,6 +107,23 @@ class FlightRecorder:
         self.m_net_bytes = m.counter(
             "sim_payload_bytes_total",
             "Payload bytes through the simulated network")
+        self.m_econ_emission = m.gauge(
+            "econ_emission_tokens",
+            "Tokens emitted in the last settled round")
+        self.m_econ_supply = m.gauge(
+            "econ_supply_tokens",
+            "Circulating token supply (sum of ledger balances)")
+        self.m_econ_burned = m.counter(
+            "econ_burned_tokens_total",
+            "Tokens burned (registration, re-registration, audit "
+            "penalties)")
+        self.m_econ_slashed = m.counter(
+            "econ_slashed_tokens_total",
+            "Validator stake slashed for consensus deviation")
+        self.m_econ_balance = m.gauge(
+            "econ_balance_tokens", "Per-uid token ledger balance")
+        # latest settled-round view for the /v1/econ endpoint
+        self._econ_snapshot: Dict[str, Any] = {}
 
     # --------------------------------------------------------- validator
     def attach_validator(self, validator) -> None:
@@ -166,6 +188,20 @@ class FlightRecorder:
                 self.m_net_bytes.inc(n, direction=kind[len("bytes_"):])
             else:
                 self.m_net_events.inc(n, kind=kind)
+        econ = record.get("econ")
+        if econ:
+            self.m_econ_emission.set(econ.get("emission", 0.0))
+            self.m_econ_supply.set(econ.get("supply", 0.0))
+            if econ.get("burned"):
+                self.m_econ_burned.inc(econ["burned"])
+            if econ.get("slashed"):
+                self.m_econ_slashed.inc(econ["slashed"])
+            for uid, bal in (econ.get("balances") or {}).items():
+                self.m_econ_balance.set(bal, uid=uid)
+            with self._feed_cv:
+                self._econ_snapshot = {"round": record.get("round"),
+                                       "block": record.get("block"),
+                                       **econ}
         if explains:
             # explains: flat list of repro.obs.explain records (possibly
             # several validators' views of the same round)
@@ -191,6 +227,13 @@ class FlightRecorder:
         with self._feed_cv:
             records = [rec for _, rec in self._feed]
         return records[-limit:]
+
+    def econ_snapshot(self) -> Dict[str, Any]:
+        """Latest settled-round token view (``/v1/econ``): emission,
+        per-uid payouts/balances/profit, burns, slashes, supply. Empty
+        dict until a settled round has been published."""
+        with self._feed_cv:
+            return dict(self._econ_snapshot)
 
     # ----------------------------------------------------------- explain
     def explain(self, uid: Optional[str] = None,

@@ -15,6 +15,10 @@ Endpoints (all GET):
     backlog and streams only rounds published after connect.
 ``/v1/explain``
     Per-peer verdict records (``?uid=peer-3&round=7`` filters).
+``/v1/econ``
+    Latest settled-round token view (``repro.econ``): emission,
+    per-uid payouts/balances/profit, burns, slashes, supply. 404
+    until a settled round has been published.
 ``/healthz``
     Liveness probe.
 
@@ -78,6 +82,12 @@ def _make_handler(hub: FlightRecorder):
                     self._json(hub.explain(
                         uid=uid,
                         round_idx=int(rnd) if rnd is not None else None))
+                elif url.path == "/v1/econ":
+                    snap = hub.econ_snapshot()
+                    if snap:
+                        self._json(snap)
+                    else:
+                        self._json({"error": "no settled rounds"}, 404)
                 elif url.path == "/v1/rounds/stream":
                     self._stream(replay=qs.get("replay",
                                                ["1"])[0] != "0")

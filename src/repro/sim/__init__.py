@@ -7,6 +7,7 @@ and multi-validator consensus — keyed to the chain's block clock.
     telemetry = engine.run()
     telemetry.to_json("telemetry.json")
 """
+from repro.econ import EconConfig
 from repro.sim.engine import SimEngine
 from repro.sim.network import LinkProfile, NetworkModel, SimBucketStore
 from repro.sim.scenario import (SCENARIOS, LinkSpec, PeerSpec, Scenario,
@@ -18,5 +19,5 @@ __all__ = [
     "SimEngine", "LinkProfile", "NetworkModel", "SimBucketStore",
     "SCENARIOS", "LinkSpec", "PeerSpec",
     "Scenario", "ValidatorSpec", "get_scenario", "register_scenario",
-    "HONEST_BEHAVIORS", "Telemetry",
+    "HONEST_BEHAVIORS", "Telemetry", "EconConfig",
 ]

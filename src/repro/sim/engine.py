@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import json
 import math
 import zlib
 from typing import Any, Callable, Dict, List, Optional
@@ -42,6 +43,8 @@ from repro.audit import assignment as audit_assignment
 from repro.comms.chain import Chain
 from repro.core import scores as S
 from repro.core.gauntlet import BaselineCache, RoundReport, Validator
+from repro.econ import (EconConfig, PayoutLedger, behavior_cost,
+                        round_emission, settle_round)
 from repro.obs.explain import explain_round
 from repro.sim.network import NetworkModel, SimBucketStore
 from repro.sim.scenario import PeerSpec, Scenario
@@ -64,10 +67,21 @@ class SimEngine:
                  fast_set_size: Optional[int] = None,
                  eval_every: int = 5,
                  eval_batch_fn: Optional[Callable] = None,
-                 obs=None):
+                 obs=None,
+                 econ: Optional[EconConfig] = None):
         assert validators, "need at least one validator"
         self.chain = chain
         self.store = store
+        # token economy (repro.econ): on by default; per-round
+        # settlement is host-side float arithmetic (no jit entry points)
+        # committed to the chain's payout bulletin. ``roi`` is the
+        # engine-local cost ledger (off-chain operating costs) the
+        # attack-ROI profit curves fold against the chain balances.
+        self.econ = econ if econ is not None else EconConfig()
+        self.roi = PayoutLedger()
+        # per-round, per-validator serialized settlements — replicas
+        # must agree byte-for-byte (tests/test_econ.py pins this)
+        self.settlements: Dict[int, Dict[str, str]] = {}
         # optional FlightRecorder (repro.obs): round records stream to
         # its SSE feed, metrics update per round, and the topology
         # endpoint reads this engine. Passive — the seeded round math
@@ -286,10 +300,76 @@ class SimEngine:
             node = self.peers.get(uid)
             if node is not None:
                 node.apply_round(rnd, agg_weights, lr)
-        self._record(rnd, active, ctxs, order, consensus, net, net_before)
+        econ_rec = self._settle(rnd, order, ctxs, consensus)
+        self._record(rnd, active, ctxs, order, consensus, net, net_before,
+                     econ_rec)
+
+    def _settle(self, rnd, order, ctxs,
+                consensus) -> Optional[Dict[str, Any]]:
+        """Per-round token settlement (repro.econ): every replica folds
+        the posted chain state into the same entry tuple, the first
+        post commits it (``Chain.post_payouts``), and the engine debits
+        the off-chain operating costs the attack-ROI curves need.
+        Host-side float arithmetic only — no jit entry points, no
+        per-round compiles."""
+        ec = self.econ
+        if not ec.enabled or not order:
+            return None
+        # quorum verdict sets: fresh flags and active strike bans,
+        # unioned across validators (computed once, shared by every
+        # replica's settlement — like the consensus weights themselves)
+        flagged: Dict[str, str] = {}
+        banned: set = set()
+        for v in order:
+            for uid, reason in sorted(ctxs[v.uid].audit_flagged.items()):
+                flagged.setdefault(uid, reason)
+            banned |= {u for u, n in v.audit_strikes.items() if n > 0}
+        flagged = dict(sorted(flagged.items()))
+        # every replica computes BEFORE anyone commits — committing
+        # applies slash entries to live stake, and the settlement must
+        # be a pure function of the *pre-settlement* chain state
+        computed = {v.uid: settle_round(ec, self.chain, rnd,
+                                        consensus=consensus,
+                                        banned=banned, flagged=flagged)
+                    for v in order}
+        self.settlements[rnd] = {
+            uid: json.dumps([e.to_dict() for e in entries],
+                            sort_keys=True)
+            for uid, entries in computed.items()}
+        for v in order:                  # first write wins on chain
+            self.chain.post_payouts(v.uid, rnd, computed[v.uid])
+        # ---- off-chain operating costs (attack-ROI accounting)
+        block = self.chain.block
+        for uid in sorted(self.peers):
+            node = self.peers[uid]
+            cost = behavior_cost(ec, node.pc.behavior,
+                                 node.pc.data_multiplier)
+            if cost > 0:
+                self.roi.debit(uid, cost, block=block, round_idx=rnd,
+                               reason=f"cost:{node.pc.behavior}")
+        # ---- telemetry view of the committed round
+        payouts: Dict[str, float] = {}
+        burned = slashed = 0.0
+        for e in self.chain.payouts(rnd):
+            if e.kind == "credit":
+                payouts[e.uid] = payouts.get(e.uid, 0.0) + e.amount
+            elif e.kind == "burn":
+                burned += e.amount
+            elif e.kind == "slash":
+                slashed += e.amount
+        balances = self.chain.balances()
+        costs = self.roi.balances()
+        profit = {uid: balances.get(uid, 0.0) + costs.get(uid, 0.0)
+                  for uid in sorted(self.peers)}
+        return {"emission": round_emission(ec, rnd),
+                "payouts": dict(sorted(payouts.items())),
+                "burned": burned, "slashed": slashed,
+                "banned": sorted(banned),
+                "balances": balances, "profit": profit,
+                "supply": sum(balances.values())}
 
     def _record(self, rnd, active, ctxs, order, consensus, net,
-                net_before) -> None:
+                net_before, econ_rec=None) -> None:
         val_loss = None
         if (self.eval_batch_fn is not None and rnd % self.eval_every == 0
                 and order):
@@ -335,13 +415,16 @@ class SimEngine:
             # ``perf`` side-channel, never into the deterministic record
             stage_ms={v.uid: {s: round(ms, 3) for s, ms
                               in v.last_stage_ms.items()}
-                      for v in order})
+                      for v in order},
+            # token settlement view (repro.econ): absent when the
+            # scenario runs with the economy disabled
+            **({"econ": econ_rec} if econ_rec is not None else {}))
         if self.obs is not None:
             explains: List[Dict[str, Any]] = []
             for v in order:
                 explains.extend(explain_round(
                     rnd, v, ctxs[v.uid], consensus=consensus,
-                    behaviors=behav).values())
+                    behaviors=behav, econ=econ_rec).values())
             self.obs.publish_round(record, explains)
 
     # --------------------------------------------------------- topology
@@ -475,7 +558,7 @@ class SimEngine:
             "blocks_per_round": blocks_per_round, "scheme": scheme.name,
             "description": scenario.description})
         engine = cls(chain, store, validators, {}, telemetry=telemetry,
-                     grad_fn=grad_fn, obs=obs,
+                     grad_fn=grad_fn, obs=obs, econ=scenario.econ,
                      eval_every=eval_every
                      or max(scenario.rounds // 6, 1),
                      eval_batch_fn=lambda rnd: pipeline.unassigned_data(

@@ -20,6 +20,7 @@ import dataclasses
 import math
 from typing import Callable, Dict, Optional, Tuple
 
+from repro.econ.emission import EconConfig
 from repro.sim.network import LinkProfile
 
 
@@ -106,6 +107,10 @@ class Scenario:
     # gradient scheme (repro.schemes registry name) the testnet trains
     # with; ignored when the engine is handed an explicit TrainConfig
     scheme: str = "demo"
+    # token-economy knobs (repro.econ): None = the default EconConfig
+    # (settlement on, halving curve). Scenarios probing a specific
+    # emission curve / slashing regime override this.
+    econ: Optional[EconConfig] = None
 
 
 # ------------------------------------------------------------- registry

@@ -1,0 +1,341 @@
+"""Token economy (repro.econ): emission curves, the append-only payout
+ledger, chain settlement commits, slashing, and the sim-level
+bit-identity / ROI invariants the econ-smoke CI job gates on."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.comms.chain import Chain
+from repro.configs.registry import tiny_config
+from repro.econ import (EconConfig, LedgerEntry, PayoutLedger,
+                        audit_penalty_entries, fold_balances, make_entry,
+                        registration_entries, round_emission,
+                        settle_round, slash_entries, split_emission,
+                        validator_deviation)
+from repro.sim import PeerSpec, Scenario, SimEngine, ValidatorSpec
+
+CFG = tiny_config()
+
+
+def _engine(scenario, **kw):
+    kw.setdefault("batch", 2)
+    kw.setdefault("seq_len", 32)
+    return SimEngine.from_scenario(scenario, CFG, **kw)
+
+
+# ------------------------------------------------------------- emission
+
+
+def test_emission_curves():
+    const = EconConfig(emission_curve="constant", emission_per_round=80.0)
+    assert [round_emission(const, t) for t in range(3)] == [80.0] * 3
+    halv = EconConfig(emission_curve="halving", emission_per_round=64.0,
+                      halving_rounds=2)
+    assert [round_emission(halv, t) for t in range(6)] == \
+        [64.0, 64.0, 32.0, 32.0, 16.0, 16.0]
+    decay = EconConfig(emission_curve="decay", emission_per_round=100.0,
+                       decay_rate=0.5)
+    assert [round_emission(decay, t) for t in range(3)] == \
+        [100.0, 50.0, 25.0]
+    assert round_emission(const, -1) == 0.0
+    with pytest.raises(ValueError):
+        EconConfig(emission_curve="linear")
+    with pytest.raises(ValueError):
+        EconConfig(validator_share=1.5)
+
+
+def test_split_emission_conserves_and_excludes_banned():
+    ec = EconConfig(emission_per_round=100.0, validator_share=0.2)
+    cons = {"a": 0.5, "b": 0.3, "c": 0.2}
+    stakes = {"v0": 750.0, "v1": 250.0}
+    peers, vals = split_emission(ec, 0, cons, stakes)
+    assert abs(sum(peers.values()) - 80.0) < 1e-9
+    assert abs(sum(vals.values()) - 20.0) < 1e-9
+    assert vals["v0"] == pytest.approx(15.0)
+    # banned peers are dropped BEFORE renormalizing: their would-be
+    # share goes to the working fleet, not to anyone's pocket
+    peers_b, _ = split_emission(ec, 0, cons, stakes, banned=("a",))
+    assert "a" not in peers_b
+    assert abs(sum(peers_b.values()) - 80.0) < 1e-9
+    assert peers_b["b"] == pytest.approx(80.0 * 0.3 / 0.5)
+
+
+def test_split_emission_zero_stake_and_empty_pools():
+    ec = EconConfig(emission_per_round=100.0, validator_share=0.2)
+    # zero total stake: the validator pool simply does not mint
+    peers, vals = split_emission(ec, 0, {"a": 1.0}, {"v0": 0.0})
+    assert vals == {}
+    assert abs(sum(peers.values()) - 80.0) < 1e-9
+    # empty consensus: the peer pool does not mint either
+    peers, vals = split_emission(ec, 0, {}, {"v0": 100.0})
+    assert peers == {}
+    assert abs(sum(vals.values()) - 20.0) < 1e-9
+
+
+# --------------------------------------------------------------- ledger
+
+
+def test_make_entry_validates_and_coerces():
+    e = make_entry("credit", "p0", np.float64(1.5),
+                   block=np.int64(30), round_idx=2)
+    assert type(e.amount) is float and type(e.block) is int
+    assert e.signed() == 1.5
+    assert make_entry("burn", "p0", 1.0, block=0, round_idx=0).signed() \
+        == -1.0
+    with pytest.raises(ValueError):
+        make_entry("mint", "p0", 1.0, block=0, round_idx=0)
+    with pytest.raises(ValueError):
+        make_entry("credit", "p0", -1.0, block=0, round_idx=0)
+    with pytest.raises(ValueError):
+        make_entry("credit", "p0", float("nan"), block=0, round_idx=0)
+
+
+def test_ledger_fold_supply_and_round_queries():
+    led = PayoutLedger()
+    led.credit("a", 10.0, block=9, round_idx=0)
+    led.credit("b", 5.0, block=9, round_idx=0)
+    led.burn("b", 1.0, block=19, round_idx=1)
+    led.slash("v", 2.0, block=19, round_idx=1)
+    led.debit("a", 0.5, block=19, round_idx=1)
+    assert led.balances() == {"a": 9.5, "b": 4.0, "v": -2.0}
+    assert led.balance("a") == 9.5
+    assert len(led.round_entries(1)) == 3
+    sup = led.supply()
+    assert sup["minted"] == 15.0 and sup["burned"] == 1.0
+    assert sup["slashed"] == 2.0 and sup["debited"] == 0.5
+    assert sup["circulating"] == pytest.approx(11.5)
+    assert fold_balances(led.entries) == led.balances()
+
+
+def test_ledger_export_replay_roundtrip_and_corruption():
+    led = PayoutLedger()
+    led.credit("a", 3.0, block=9, round_idx=0, reason="emission:peer")
+    led.burn("a", 1.0, block=9, round_idx=0, reason="register")
+    text = led.to_json()
+    assert text == led.to_json()                   # deterministic
+    doc = json.loads(text)
+    replayed = PayoutLedger.replay(doc)
+    assert replayed.to_json() == text              # bit-identical replay
+    doc["balances"]["a"] = 99.0                    # corrupt the export
+    with pytest.raises(ValueError):
+        PayoutLedger.replay(doc)
+
+
+# ----------------------------------------------------- chain settlement
+
+
+def _chain(peers=("p0", "p1"), validators=(("v0", 1000.0),)):
+    chain = Chain(blocks_per_round=10)
+    for uid in peers:
+        chain.register_peer(uid, f"rk-{uid}")
+    for uid, stake in validators:
+        chain.register_validator(uid, stake)
+    return chain
+
+
+def test_chain_post_payouts_first_write_wins_and_balances():
+    chain = _chain()
+    a = (make_entry("credit", "p0", 5.0, block=0, round_idx=0),)
+    b = (make_entry("credit", "p0", 7.0, block=0, round_idx=0),)
+    assert chain.post_payouts("v0", 0, a)
+    assert not chain.post_payouts("v0", 0, b)      # no-op, first wins
+    assert chain.payouts(0) == a
+    assert chain.balances() == {"p0": 5.0}
+    assert chain.balance("p1") == 0.0
+    assert chain.settled_rounds() == [0]
+    with pytest.raises(AssertionError):
+        chain.post_payouts("nobody", 1, a)         # must stake to settle
+
+
+def test_slash_commit_reduces_live_stake():
+    chain = _chain(validators=(("v0", 1000.0), ("v1", 100.0)))
+    slash = (make_entry("slash", "v1", 40.0, block=0, round_idx=0),)
+    chain.post_payouts("v0", 0, slash)
+    assert chain.validators["v1"].stake == 60.0
+    # slashing cannot take stake below zero
+    chain.post_payouts("v0", 1, (make_entry("slash", "v1", 1e6,
+                                            block=10, round_idx=1),))
+    assert chain.validators["v1"].stake == 0.0
+
+
+def test_registration_entries_charge_rereg_after_churn():
+    ec = EconConfig()
+    chain = _chain(peers=())
+    chain.register_peer("fresh", "rk-fresh")                   # block 0, round 0
+    chain.advance(10)
+    chain.deregister_peer("fresh")                 # banned / churned out
+    chain.advance(10)
+    chain.register_peer("fresh", "rk-fresh")                   # block 20, round 2
+    r0 = registration_entries(ec, chain, 0, block=9)
+    assert [(e.kind, e.uid, e.amount) for e in r0] == \
+        [("burn", "fresh", ec.registration_burn)]
+    r2 = registration_entries(ec, chain, 2, block=29)
+    assert [(e.kind, e.amount) for e in r2] == \
+        [("burn", ec.registration_burn), ("burn", ec.rereg_cost)]
+    assert "re-register" in r2[1].reason
+
+
+def test_settle_round_composes_and_respects_disable():
+    ec = EconConfig()
+    chain = _chain(peers=("p0", "p1"),
+                   validators=(("v0", 800.0), ("v1", 200.0)))
+    chain.post_weights("v0", {"p0": 0.7, "p1": 0.3})
+    chain.post_weights("v1", {"p0": 0.7, "p1": 0.3})
+    chain.advance(10)
+    entries = settle_round(ec, chain, 0)
+    kinds = [e.kind for e in entries]
+    # registration burns first, then peer credits, then validator credits
+    assert kinds == ["burn", "burn", "credit", "credit", "credit",
+                     "credit"]
+    bal = fold_balances(entries)
+    assert bal["p0"] > bal["p1"] > 0
+    assert bal["v0"] == pytest.approx(4 * bal["v1"] + 0.0)
+    assert settle_round(EconConfig(enabled=False), chain, 0) == ()
+    # fresh audit flags burn the penalty on top
+    flagged = settle_round(ec, chain, 0, flagged={"p1": "copycat"})
+    audit = [e for e in flagged if e.reason.startswith("audit:")]
+    assert [(e.kind, e.uid, e.amount) for e in audit] == \
+        [("burn", "p1", ec.audit_penalty)]
+
+
+# ------------------------------------------------------------- slashing
+
+
+def test_validator_deviation_metric():
+    assert validator_deviation({"a": 0.5, "b": 0.5},
+                               {"a": 0.5, "b": 0.5}) == 0.0
+    assert validator_deviation({"a": 1.0}, {"b": 1.0}) == \
+        pytest.approx(1.0)
+    # scale-invariant: only the normalized distribution matters
+    assert validator_deviation({"a": 10.0, "b": 10.0},
+                               {"a": 0.5, "b": 0.5}) == pytest.approx(0.0)
+    assert validator_deviation({}, {}) == 0.0
+
+
+def test_slash_entries_threshold_and_zero_stake():
+    ec = EconConfig(slash_threshold=0.5, slash_fraction=0.1)
+    cons = {"a": 0.5, "b": 0.5}
+    posted = {"good": {"a": 0.5, "b": 0.5},       # deviation 0
+              "rogue": {"c": 1.0},                # deviation 1.0
+              "broke": {"c": 1.0}}                # deviant but unstaked
+    stakes = {"good": 1000.0, "rogue": 500.0, "broke": 0.0}
+    out = slash_entries(ec, posted_weights=posted, consensus=cons,
+                        stakes=stakes, block=9, round_idx=0)
+    assert [(e.uid, e.amount) for e in out] == [("rogue", 50.0)]
+    assert "deviate" in out[0].reason
+    assert slash_entries(ec, posted_weights=posted, consensus={},
+                         stakes=stakes, block=9, round_idx=0) == []
+
+
+def test_audit_penalty_entries_sorted_and_gated():
+    ec = EconConfig(audit_penalty=2.0)
+    out = audit_penalty_entries(ec, {"z": "copycat", "a": "replay"},
+                                block=9, round_idx=1)
+    assert [e.uid for e in out] == ["a", "z"]
+    assert all(e.kind == "burn" and e.amount == 2.0 for e in out)
+    assert audit_penalty_entries(EconConfig(audit_penalty=0.0),
+                                 {"a": "x"}, block=9, round_idx=1) == []
+
+
+# ----------------------------------------------------- sim-level (slow)
+
+
+def test_replicas_settle_bit_identically_and_replay():
+    """Two staked validators independently compute every round's
+    settlement; the blobs must be byte-equal, the committed ledger must
+    replay bit-identically, and a re-run of the same seed must export
+    the identical ledger."""
+    sc = Scenario(
+        name="econ-dual", rounds=3, seed=1,
+        peers=tuple(PeerSpec(uid=f"p{i}") for i in range(4)),
+        validators=(ValidatorSpec(uid="va", stake=1000.0),
+                    ValidatorSpec(uid="vb", stake=400.0)))
+    eng = _engine(sc)
+    eng.run()
+    assert sorted(eng.settlements) == [0, 1, 2]
+    for rnd, per_validator in eng.settlements.items():
+        assert set(per_validator) == {"va", "vb"}
+        assert len(set(per_validator.values())) == 1, rnd
+    led = PayoutLedger(eng.chain.payouts())
+    replayed = PayoutLedger.replay(json.loads(led.to_json()))
+    assert replayed.to_json() == led.to_json()
+    assert eng.chain.balances() == replayed.balances()
+    # same seed => byte-identical committed ledger
+    eng2 = _engine(sc)
+    eng2.run()
+    assert PayoutLedger(eng2.chain.payouts()).to_json() == led.to_json()
+
+
+def test_flagged_peer_balance_never_recovers_in_ban_window():
+    """Once the audit bans a copycat, its chain balance must be
+    non-increasing for the rest of the run — the ban window pays it
+    nothing while burns can still take from it."""
+    sc = Scenario(
+        name="econ-copycat", rounds=4, seed=2,
+        peers=(PeerSpec(uid="h0"), PeerSpec(uid="h1"),
+               PeerSpec(uid="h2"),
+               PeerSpec(uid="leech", behavior="copycat",
+                        copy_victim="h0")))
+    eng = _engine(sc)
+    tel = eng.run()
+    econ = [r["econ"] for r in tel.rounds]
+    banned_rounds = [i for i, rec in enumerate(econ)
+                     if "leech" in rec["banned"]]
+    assert banned_rounds, "copycat was never banned"
+    prev = None
+    for i in banned_rounds:
+        assert "leech" not in econ[i]["payouts"]
+        bal = econ[i]["balances"].get("leech", 0.0)
+        if prev is not None:
+            assert bal <= prev + 1e-12
+        prev = bal
+    # and honest profit dominates the leech's in the telemetry record
+    final = econ[-1]["profit"]
+    assert final["leech"] < min(final[f"h{i}"] for i in range(3))
+
+
+def test_offline_validator_earns_no_emission_while_dark():
+    """Validator emission is restricted to validators that posted this
+    round: a failed-over validator's credit stream stops while it is
+    offline and resumes on recovery."""
+    sc = Scenario(
+        name="econ-failover", rounds=4, seed=2,
+        peers=tuple(PeerSpec(uid=f"p{i}") for i in range(3)),
+        validators=(ValidatorSpec(uid="va", stake=1000.0,
+                                  offline=((1, 3),)),
+                    ValidatorSpec(uid="vb", stake=500.0)))
+    eng = _engine(sc)
+    eng.run()
+    va_credit_rounds = sorted({
+        e.round for e in eng.chain.payouts()
+        if e.uid == "va" and e.kind == "credit"})
+    vb_credit_rounds = sorted({
+        e.round for e in eng.chain.payouts()
+        if e.uid == "vb" and e.kind == "credit"})
+    assert va_credit_rounds == [0, 3]              # dark rounds 1-2
+    assert vb_credit_rounds == [0, 1, 2, 3]
+    # settlement itself kept committing while va was dark
+    assert eng.chain.settled_rounds() == [0, 1, 2, 3]
+
+
+def test_rejoining_peer_pays_the_rereg_cost():
+    """A peer that leaves and rejoins re-registers on chain; settlement
+    charges the registration burn again plus the re-registration cost."""
+    ec = EconConfig()
+    sc = Scenario(
+        name="econ-churn", rounds=5, seed=3,
+        peers=(PeerSpec(uid="stay-0"), PeerSpec(uid="stay-1"),
+               PeerSpec(uid="stay-2"),
+               PeerSpec(uid="hopper", join_round=1, leave_round=2,
+                        rejoin_round=3)))
+    eng = _engine(sc)
+    eng.run()
+    hopper_burns = [e for e in eng.chain.payouts()
+                    if e.uid == "hopper" and e.kind == "burn"]
+    reasons = [e.reason for e in hopper_burns]
+    assert reasons.count("register") == 2          # join + rejoin
+    assert any(r.startswith("re-register") for r in reasons)
+    rereg = [e for e in hopper_burns
+             if e.reason.startswith("re-register")]
+    assert rereg[0].amount == ec.rereg_cost and rereg[0].round == 3

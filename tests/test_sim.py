@@ -210,6 +210,53 @@ def test_fuzzed_scenarios_keep_honest_majority():
                                               np.asarray(y))
 
 
+def test_fuzzed_roi_honest_profit_dominates():
+    """Attack-ROI fuzz (repro.econ): random adversary mixes x emission
+    curves must keep mean honest profit strictly above every adversary
+    behaviour's, and a banned peer's chain balance must never recover
+    inside its ban window."""
+    from repro.econ import EconConfig, profit_by_behavior, profits
+    from repro.sim import HONEST_BEHAVIORS
+    ROI_ADVERSARIES = ("lazy", "byz_noise", "copycat", "copycat_noise")
+    curves = ("constant", "halving", "decay")
+    for seed in range(3):
+        rng = np.random.RandomState(7331 + seed)
+        n_honest = 4 + int(rng.randint(3))            # 4..6 honest
+        peers = [PeerSpec(uid=f"h{i}") for i in range(n_honest)]
+        for i in range(1 + int(rng.randint(2))):      # 1..2 adversaries
+            b = ROI_ADVERSARIES[int(rng.randint(len(ROI_ADVERSARIES)))]
+            peers.append(PeerSpec(
+                uid=f"adv{i}", behavior=b,
+                copy_victim="h0" if b.startswith("copycat") else None))
+        ec = EconConfig(emission_curve=curves[seed % len(curves)])
+        sc = Scenario(name=f"roi-fuzz-{seed}", rounds=4, seed=seed,
+                      peers=tuple(peers), econ=ec)
+        eng = _engine(sc)
+        tel = eng.run()
+        behaviors = {uid: node.pc.behavior
+                     for uid, node in eng.peers.items()}
+        profit = profits(eng.chain.balances(), eng.roi)
+        by = profit_by_behavior(profit, behaviors)
+        honest_mean = np.mean([v for b, v in by.items()
+                               if b in HONEST_BEHAVIORS])
+        for b, v in by.items():
+            if b not in HONEST_BEHAVIORS:
+                assert honest_mean > v, (seed, by)
+        # flagged peers' balances never recover inside the ban window:
+        # no payout while banned, non-increasing across consecutive
+        # banned rounds
+        econ_recs = [r["econ"] for r in tel.rounds]
+        prev = None
+        for rec in econ_recs:
+            for uid in rec["banned"]:
+                assert uid not in rec["payouts"], (seed, uid, rec)
+                if prev is not None and uid in prev["banned"]:
+                    assert (rec["balances"].get(uid, 0.0)
+                            <= prev["balances"].get(uid, 0.0) + 1e-12), \
+                        (seed, uid)
+            prev = rec
+
+
 def test_telemetry_is_deterministic_across_runs():
     """Same seed => byte-identical telemetry JSON (the acceptance
     criterion behind reproducible scenario artifacts)."""
